@@ -1,0 +1,87 @@
+"""Pallas kernel micro-benchmarks (interpret-mode semantics + wall time).
+
+Interpret-mode wall times are Python-evaluator times, NOT hardware times —
+they are recorded to track kernel-logic regressions, and each row also
+re-validates the kernel against its pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.membench.ops import make_buffer, membench
+from repro.kernels.membench.ref import membench_ref
+from repro.kernels.semaphore.ops import semaphore_admission
+from repro.kernels.semaphore.ref import sleeping_semaphore_ref
+from repro.kernels.ticket_lock.ops import ticket_lock_run
+from repro.kernels.ticket_lock.ref import ticket_lock_ref
+from repro.kernels.xf_barrier.ops import fresh_flags, xf_barrier
+from repro.kernels.xf_barrier.ref import xf_barrier_ref
+
+
+def main() -> List[str]:
+    rows: List[str] = []
+    key = jax.random.PRNGKey(0)
+
+    # ---- xf_barrier
+    n = 64
+    ones = jnp.ones(n, jnp.int32)
+    t0 = time.perf_counter()
+    k = xf_barrier(fresh_flags(n), jnp.int32(1), ones, ones)
+    jax.block_until_ready(k)
+    us = (time.perf_counter() - t0) * 1e6
+    r = xf_barrier_ref(fresh_flags(n), jnp.int32(1), ones, ones)
+    ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(k, r))
+    rows.append(f"kernel_xf_barrier_n{n},{us:.1f},match={int(ok)}")
+
+    # ---- ticket_lock
+    arr = jax.random.permutation(key, jnp.arange(n, dtype=jnp.int32))
+    m = jax.random.uniform(key, (n,), minval=0.5, maxval=1.5)
+    b = jax.random.normal(key, (n,))
+    t0 = time.perf_counter()
+    g1, t1, a1 = ticket_lock_run(arr, m, b)
+    jax.block_until_ready(a1)
+    us = (time.perf_counter() - t0) * 1e6
+    g2, t2, a2 = ticket_lock_ref(arr, m, b)
+    ok = (np.array_equal(np.asarray(g1), np.asarray(g2))
+          and abs(float(a1) - float(a2)) < 1e-3)
+    rows.append(f"kernel_ticket_lock_n{n},{us:.1f},match={int(ok)};fifo=1")
+
+    # ---- semaphore admission
+    at = jnp.sort(jax.random.uniform(key, (n,)) * 10)
+    hold = jax.random.uniform(key, (n,), minval=0.1, maxval=2.0)
+    t0 = time.perf_counter()
+    gk, rk, wk = semaphore_admission(at, hold, capacity=4)
+    jax.block_until_ready(gk)
+    us = (time.perf_counter() - t0) * 1e6
+    gr, rr, wr = sleeping_semaphore_ref(at, hold, 4)
+    ok = np.allclose(np.asarray(gk), np.asarray(gr), rtol=1e-6)
+    rows.append(f"kernel_semaphore_n{n}_k4,{us:.1f},match={int(ok)}")
+
+    # ---- membench (4 cells)
+    for cont in (True, False):
+        for wr2 in (True, False):
+            buf = make_buffer(16)
+            t0 = time.perf_counter()
+            bk, sk = membench(buf, n_steps=16, contentious=cont, write=wr2,
+                              repeats=8)
+            jax.block_until_ready(sk)
+            us = (time.perf_counter() - t0) * 1e6
+            br, sr = membench_ref(buf, 16, contentious=cont, write=wr2,
+                                  repeats=8)
+            ok = np.allclose(np.asarray(bk), np.asarray(br))
+            rows.append(
+                f"kernel_membench_{'c' if cont else 'n'}"
+                f"{'w' if wr2 else 'r'},{us:.1f},match={int(ok)}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

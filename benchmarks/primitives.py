@@ -1,0 +1,166 @@
+"""Paper Figures 1-3 + Table 5: primitive ops/sec vs concurrency.
+
+Simulated Tesla (GTX295) and Fermi (GTX580) sweeps of every implementation
+the paper compares:
+
+  Figure 1 (barrier):   two-stage atomic counter vs XF flag barrier
+  Figure 2 (mutex):     spin, spin+backoff, FA(+backoff)
+  Figure 3 (semaphore): spin, spin+backoff, sleeping x initial value
+
+plus the 'Host' row measured with real threads (hostbench), and the
+Table-5 best-implementation auto-selection check.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.abstraction import (FERMI, TESLA, PrimitiveKind, classify,
+                                    select_impl)
+from repro.core.primitives_sim import run_primitive
+
+# Block counts swept (paper: 1..240 Tesla / 1..128 Fermi; we subsample).
+TESLA_BLOCKS = (1, 8, 30, 60, 120, 240)
+FERMI_BLOCKS = (1, 8, 16, 32, 64, 128)
+
+# The paper truncates the Tesla spin-lock curves past ~120-130 blocks
+# ("unpredictable and poor"); the simulator reproduces that regime, so we
+# apply the same cap + a smaller event budget there.
+SPIN_CAP_TESLA = 120
+
+
+def _fmt(rows, name, us, detail):
+    rows.append(f"{name},{us:.1f},{detail}")
+
+
+def sweep(machine, name, blocks_list, *, ops=20) -> List[str]:
+    rows: List[str] = []
+
+    # ---- Figure 1: barriers
+    for impl in ("atomic", "xf"):
+        for nb in blocks_list:
+            t0 = time.perf_counter()
+            r = run_primitive(machine, "barrier", impl, blocks=nb, ops=ops)
+            us = (time.perf_counter() - t0) * 1e6
+            _fmt(rows, f"fig1_{name}_barrier_{impl}_b{nb}", us,
+                 f"ops_per_s={r.ops_per_sec:.0f}"
+                 f"{';TRUNC' if r.truncated else ''}")
+
+    # ---- Figure 2: mutexes
+    for impl in ("spin", "spin_backoff", "fa"):
+        for nb in blocks_list:
+            if name == "tesla" and impl == "spin" and nb > SPIN_CAP_TESLA:
+                continue
+            t0 = time.perf_counter()
+            r = run_primitive(machine, "mutex", impl, blocks=nb, ops=ops,
+                              max_events=8_000_000)
+            us = (time.perf_counter() - t0) * 1e6
+            _fmt(rows, f"fig2_{name}_mutex_{impl}_b{nb}", us,
+                 f"ops_per_s={r.ops_per_sec:.0f};fair={int(r.fair_fifo)};"
+                 f"viol={r.violations}{';TRUNC' if r.truncated else ''}")
+
+    # ---- Figure 3: semaphores x initial value
+    for init in (1, 2, 10, 120):
+        for impl in ("spin", "spin_backoff", "sleeping"):
+            for nb in blocks_list:
+                if name == "tesla" and impl.startswith("spin") \
+                        and nb > SPIN_CAP_TESLA:
+                    continue
+                t0 = time.perf_counter()
+                r = run_primitive(machine, "semaphore", impl, blocks=nb,
+                                  ops=min(ops, 10), initial=init,
+                                  max_events=5_000_000)
+                us = (time.perf_counter() - t0) * 1e6
+                _fmt(rows, f"fig3_{name}_sem{init}_{impl}_b{nb}", us,
+                     f"ops_per_s={r.ops_per_sec:.0f};viol={r.violations}"
+                     f"{';TRUNC' if r.truncated else ''}")
+    return rows
+
+
+def table5_check() -> List[str]:
+    """Auto-selection (select_impl) vs the paper's Table 5."""
+    rows: List[str] = []
+    expected = {
+        ("tesla", "barrier"): "xf",
+        ("fermi", "barrier"): "xf",
+        ("tesla", "mutex"): "fa",
+        ("fermi", "mutex"): "spin_backoff",
+        ("tesla", "sem_low"): "sleeping",
+        ("fermi", "sem_low"): "spin_backoff",
+        ("tesla", "sem_high"): "sleeping",
+        ("fermi", "sem_high"): "sleeping",
+    }
+    t0 = time.perf_counter()
+    got = {
+        ("tesla", "barrier"): select_impl(TESLA, PrimitiveKind.BARRIER).algorithm,
+        ("fermi", "barrier"): select_impl(FERMI, PrimitiveKind.BARRIER).algorithm,
+        ("tesla", "mutex"): select_impl(TESLA, PrimitiveKind.MUTEX).algorithm,
+        ("fermi", "mutex"): select_impl(FERMI, PrimitiveKind.MUTEX).algorithm,
+        ("tesla", "sem_low"): select_impl(
+            TESLA, PrimitiveKind.SEMAPHORE, semaphore_initial=1).algorithm,
+        ("fermi", "sem_low"): select_impl(
+            FERMI, PrimitiveKind.SEMAPHORE, semaphore_initial=1).algorithm,
+        ("tesla", "sem_high"): select_impl(
+            TESLA, PrimitiveKind.SEMAPHORE, semaphore_initial=120).algorithm,
+        ("fermi", "sem_high"): select_impl(
+            FERMI, PrimitiveKind.SEMAPHORE, semaphore_initial=120).algorithm,
+    }
+    us = (time.perf_counter() - t0) * 1e6
+    n_match = sum(got[k] == expected[k] for k in expected)
+    detail = ";".join(f"{k[0]}.{k[1]}={got[k]}" +
+                      ("" if got[k] == expected[k] else f"(paper:{expected[k]})")
+                      for k in expected)
+    rows.append(f"table5_selection,{us:.1f},match={n_match}/8;{detail}")
+    rows.append(f"table5_classes,{0.0:.1f},"
+                f"tesla={classify(TESLA)};fermi={classify(FERMI)}")
+    return rows
+
+
+def headline_speedups(ops: int = 20) -> List[str]:
+    """Paper Section 7 headline numbers."""
+    rows: List[str] = []
+    t0 = time.perf_counter()
+    tes_spin = run_primitive(TESLA, "mutex", "spin", blocks=120, ops=ops,
+                             max_events=8_000_000)
+    tes_fa = run_primitive(TESLA, "mutex", "fa", blocks=240, ops=ops)
+    fer_spin = run_primitive(FERMI, "mutex", "spin", blocks=128, ops=ops)
+    fer_bo = run_primitive(FERMI, "mutex", "spin_backoff", blocks=128, ops=ops)
+    fer_sem_spin = run_primitive(FERMI, "semaphore", "spin", blocks=128,
+                                 ops=10, initial=120, max_events=5_000_000)
+    fer_sem_slp = run_primitive(FERMI, "semaphore", "sleeping", blocks=128,
+                                ops=10, initial=120)
+    tes_sem_spin = run_primitive(TESLA, "semaphore", "spin_backoff",
+                                 blocks=120, ops=10, initial=10,
+                                 max_events=5_000_000)
+    tes_sem_slp = run_primitive(TESLA, "semaphore", "sleeping", blocks=120,
+                                ops=10, initial=10)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        f"headline_fa_vs_spin_tesla,{us:.1f},"
+        f"x={tes_fa.ops_per_sec / tes_spin.ops_per_sec:.1f};paper=40")
+    rows.append(
+        f"headline_backoff_gain_fermi,{0.0:.1f},"
+        f"pct={100 * (fer_bo.ops_per_sec / fer_spin.ops_per_sec - 1):.0f};paper=40")
+    rows.append(
+        f"headline_sleepsem_vs_spin_fermi,{0.0:.1f},"
+        f"x={fer_sem_slp.ops_per_sec / fer_sem_spin.ops_per_sec:.1f};paper=70")
+    rows.append(
+        f"headline_sleepsem_vs_spin_tesla,{0.0:.1f},"
+        f"x={tes_sem_slp.ops_per_sec / tes_sem_spin.ops_per_sec:.1f};paper=3")
+    return rows
+
+
+def main(fast: bool = True) -> List[str]:
+    blocks_t = TESLA_BLOCKS if not fast else (1, 30, 120, 240)
+    blocks_f = FERMI_BLOCKS if not fast else (1, 32, 128)
+    rows = sweep(TESLA, "tesla", blocks_t)
+    rows += sweep(FERMI, "fermi", blocks_f)
+    rows += table5_check()
+    rows += headline_speedups()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(fast=False):
+        print(r)

@@ -1,0 +1,78 @@
+"""Roofline report: read dry-run artifacts -> per-cell three-term table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+the §Roofline table: compute/memory/collective terms (seconds), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the perfect-overlap MFU bound.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ART_DIR = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def load_records(art_dir: str = ART_DIR) -> List[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render_table(recs: List[dict], mesh: Optional[str] = "16x16") -> List[str]:
+    rows = []
+    header = ("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+              "bottleneck,useful_flops_ratio,mfu_bound")
+    rows.append(header)
+    for r in recs:
+        if mesh and r["mesh"] != mesh:
+            continue
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['t_compute']:.4f},{r['t_memory']:.4f},"
+            f"{r['t_collective']:.4f},{r['bottleneck']},"
+            f"{r['useful_flops_ratio']:.3f},{r['mfu_bound']:.4f}")
+    return rows
+
+
+def pick_hillclimb_candidates(recs: List[dict]) -> Dict[str, dict]:
+    """The three §Perf targets: worst roofline fraction, most collective-
+    bound, most representative (largest collective *count* — the cell that
+    stresses the paper's synchronization scheduling the hardest)."""
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    if not single:
+        return {}
+    worst_mfu = min(
+        (r for r in single if r["shape"].startswith("train")),
+        key=lambda r: r["mfu_bound"])
+    most_coll = max(
+        single, key=lambda r: r["t_collective"] /
+        max(r["t_compute"] + r["t_memory"] + r["t_collective"], 1e-12))
+    most_sync = max(
+        single,
+        key=lambda r: sum(c["count"] for c in r["collectives"].values()))
+    return {"worst_roofline": worst_mfu, "most_collective_bound": most_coll,
+            "most_sync_ops": most_sync}
+
+
+def main() -> List[str]:
+    recs = load_records()
+    if not recs:
+        return ["roofline_report,0.0,no_artifacts_found_run_dryrun_first"]
+    out = []
+    for line in render_table(recs, mesh=None):
+        out.append(f"roofline,{0.0:.1f},{line}")
+    cands = pick_hillclimb_candidates(recs)
+    for k, r in cands.items():
+        out.append(f"roofline_candidate_{k},{0.0:.1f},"
+                   f"{r['arch']}/{r['shape']} bottleneck={r['bottleneck']}")
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

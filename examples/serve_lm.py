@@ -1,0 +1,10 @@
+"""Batched serving example: continuous batching + semaphore admission.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen3-14b", "--smoke", "--requests", "12",
+          "--capacity", "4", "--prompt-len", "16", "--new-tokens", "8"])

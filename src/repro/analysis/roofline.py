@@ -1,0 +1,187 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+  memory term     = HLO_bytes_accessed   / (chips * HBM_BW)
+  collective term = bytes_on_wire        / (chips * LINK_BW)
+
+``compiled.cost_analysis()`` reports the *per-device* SPMD program, so the
+per-chip terms divide by per-chip peaks directly (equivalently: total =
+per-device x chips, then divide by chips x peak — same number; we record
+the per-device reading).
+
+collective bytes are not in cost_analysis: ``parse_collectives`` scans the
+compiled (post-SPMD) HLO text and sums result-shape bytes per collective
+op, with wire multipliers (ring all-reduce moves ~2x the payload;
+all-gather result already counts the gathered size, so its wire bytes are
+~(n-1)/n ~ 1x; likewise reduce-scatter/all-to-all/permute ~1x).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Wire-byte multiplier per payload byte (ring algorithms).
+_WIRE_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result bytes per collective kind. '-start' ops counted once
+    ('-done' carries no shape payload of its own in the result tuple)."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+        out[kind]["wire_bytes"] += b * _WIRE_MULT[kind]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_wire_bytes: float
+    collectives: Dict[str, Dict[str, float]]
+    model_flops_total: float            # 6*N*D (or 6*N_active*D for MoE)
+    memory_per_device: Optional[dict] = None
+
+    # ---- the three terms (seconds per step, per chip)
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste detector)."""
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        t = self.step_time_lower_bound
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_total / self.chips / t) / PEAK_FLOPS
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collectives": self.collectives,
+            "model_flops_total": self.model_flops_total,
+            "memory_per_device": self.memory_per_device,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(arch, shape, n_params: int, n_active: Optional[int] = None
+                ) -> float:
+    """6*N*D for training; 2*N*D for a forward pass; decode D = batch
+    tokens (one token per sequence per step)."""
+    n = n_active if n_active is not None else n_params
+    if shape.mode == "train":
+        return 6.0 * n * shape.tokens
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def count_total_and_active_params(cfg) -> tuple:
+    """(total, active) parameter counts; active discounts routed experts
+    by top_k / num_experts (MODEL_FLOPS uses active for MoE)."""
+    import math
+
+    import jax
+
+    from repro.models import build_model
+    from repro.models.common import is_spec
+
+    spec = build_model(cfg).spec_tree()
+    total = expert = 0
+    for leaf in jax.tree_util.tree_leaves(spec, is_leaf=is_spec):
+        sz = math.prod(leaf.shape)
+        total += sz
+        if "expert" in leaf.logical:
+            expert += sz
+    if cfg.moe is None:
+        return total, total
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return total, int(total - expert + expert * frac)

@@ -1,0 +1,35 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ArchConfig, MoEConfig, ShapeConfig, SSMConfig  # noqa: F401
+from .shapes import ALL_SHAPES, shapes_for, skipped_shapes_for  # noqa: F401
+
+from . import (  # noqa: E402
+    falcon_mamba_7b,
+    gemma3_1b,
+    internvl2_76b,
+    jamba_1_5_large,
+    minitron_4b,
+    olmoe_1b_7b,
+    phi3_5_moe,
+    qwen1_5_110b,
+    qwen3_14b,
+    whisper_small,
+)
+
+ARCHS: Dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        internvl2_76b, gemma3_1b, minitron_4b, qwen3_14b, qwen1_5_110b,
+        phi3_5_moe, olmoe_1b_7b, whisper_small, jamba_1_5_large,
+        falcon_mamba_7b,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,33 @@
+# The paper's primary contribution: synchronization primitives designed from
+# a machine abstraction of the memory system (Stuart & Owens 2011), adapted
+# for TPU-era JAX systems at four levels:
+#   - abstraction.py / memsim.py / primitives_sim.py: the paper-faithful
+#     machine abstraction + discrete-event reproduction of the paper's
+#     benchmarks and algorithms (Tables 1-3, Figures 1-3, Table 5);
+#   - hostsync.py / coordinator.py: real (threading) implementations driving
+#     the multi-host control plane (checkpoint quiescence, stragglers,
+#     elastic membership);
+#   - device_barrier.py: the cluster-level "global barrier" and collective
+#     scheduling rules derived from the paper's design principle;
+#   - ../kernels/: Pallas TPU ports of the primitives (flag barrier, ticket
+#     lock, sleeping semaphore) validated in interpret mode.
+
+from repro.core.abstraction import (  # noqa: F401
+    FERMI,
+    TESLA,
+    TPU_V5E,
+    BenchTimes,
+    ImplChoice,
+    MachineAbstraction,
+    PrimitiveKind,
+    WaitStrategy,
+    classify,
+    select_impl,
+)
+from repro.core.memsim import MemSim, run_membench  # noqa: F401
+from repro.core.primitives_sim import (  # noqa: F401
+    BackoffConfig,
+    CriticalSectionMonitor,
+    PrimitiveResult,
+    run_primitive,
+)

@@ -1,0 +1,81 @@
+"""Device-level synchronization in JAX: the cluster analogue of the paper.
+
+The paper asked vendors for a hardware global barrier (``__syncblocks()``).
+On a TPU pod the equivalent exists: a 1-element ``psum`` compiles to an
+all-reduce over the ICI mesh — every chip blocks until every chip arrives.
+This module provides that barrier plus the collective *schedules* the
+paper's design rule implies:
+
+  principle (paper)                      collective schedule (here)
+  -------------------------------------  --------------------------------
+  bound the serializing ops per op       one fused all-reduce per step,
+                                         not one per tensor
+  front-load atomics, then poll          reduce-scatter early -> compute on
+                                         shards -> all-gather late
+  decentralize: own your word            hierarchical: reduce inside the pod
+                                         first (fast links), cross-pod on
+                                         shards only (slow links)
+
+These are used by the training loop (gradient sync) and the dry-run
+hillclimbs; everything lowers through ``shard_map`` + ``jax.lax`` collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def global_device_barrier(mesh: Mesh, axis_names: Optional[Sequence[str]] = None):
+    """A jit-able global barrier over ``mesh`` (the ``__syncblocks()`` the
+    paper wanted): a 1-element psum across every mesh axis. Returns a
+    function token -> token; data-dependence on the token orders code
+    around the barrier."""
+    names = tuple(axis_names or mesh.axis_names)
+
+    def barrier(token: jax.Array) -> jax.Array:
+        def _inner(t):
+            return jax.lax.psum(t, names)
+        return jax.shard_map(
+            _inner, mesh=mesh, in_specs=P(), out_specs=P())(token)
+
+    return barrier
+
+
+def hierarchical_psum(x: jax.Array, *, intra_axis: str, inter_axis: Optional[str]):
+    """Reduce-scatter on the fast (intra-pod) axis, all-reduce the shards on
+    the slow (cross-pod) axis, then all-gather back on the fast axis.
+
+    Must be called inside ``shard_map``. For an N-byte tensor this moves
+    N bytes on intra links but only N/|intra| on the cross-pod links —
+    the "front-load the serializing op, then work on your own shard" rule.
+    """
+    if inter_axis is None:
+        return jax.lax.psum(x, intra_axis)
+    shard = jax.lax.psum_scatter(x, intra_axis, scatter_dimension=0, tiled=True)
+    shard = jax.lax.psum(shard, inter_axis)
+    return jax.lax.all_gather(shard, intra_axis, axis=0, tiled=True)
+
+
+def make_hierarchical_allreduce(mesh: Mesh, *, intra_axis: str = "data",
+                                inter_axis: Optional[str] = None):
+    """shard_map-wrapped hierarchical all-reduce for one flat vector.
+
+    The vector must be divisible by |intra_axis|; the training loop pads
+    once at parameter-flattening time, not per step.
+    """
+    axes = [a for a in (intra_axis, inter_axis) if a and a in mesh.axis_names]
+    inter = inter_axis if (inter_axis and inter_axis in mesh.axis_names) else None
+
+    def allreduce(v: jax.Array) -> jax.Array:
+        def _inner(x):
+            return hierarchical_psum(x, intra_axis=intra_axis, inter_axis=inter)
+        return jax.shard_map(
+            _inner, mesh=mesh, in_specs=P(), out_specs=P(),
+        )(v)
+
+    return allreduce

@@ -1,0 +1,399 @@
+"""Real (threading) implementations of the paper's primitives for the host
+control plane.
+
+A multi-host training deployment needs exactly the operations the paper
+builds: barriers (checkpoint quiescence, mesh reconfiguration), mutexes
+(membership/metadata mutation), and semaphores (serving admission control).
+These are the *measured-on-this-machine* implementations — the "Host" row of
+the machine-abstraction classification in EXPERIMENTS.md — and they mirror
+the paper's algorithms one-to-one:
+
+  =====================  ==========================================
+  paper                  here
+  =====================  ==========================================
+  atomic (atomicExch /   ``AtomicWord`` — a lock-guarded int. RMW
+  atomicInc)             costs a lock round trip (the "atomic").
+  volatile load/store    plain Python attribute read/write of an int
+                         (GIL-atomic, no lock — the cheap access).
+  GPU spinning           busy retry of the RMW
+  GPU sleeping           polling a plain int the owner updates
+  backoff                incremental ``time.sleep`` between retries
+  CPU blocking           ``threading.Condition`` (the futex analogue;
+                         exists on hosts, impossible on the GPU)
+  =====================  ==========================================
+
+The same asymmetry the paper measures on GPUs (atomics ~3-90x slower than
+volatile accesses) holds here (a contended ``threading.Lock`` RMW vs a plain
+read), so the paper's designs — bound the atomics, front-load them, then poll
+— transfer directly, and ``benchmarks/hostbench.py`` measures by how much.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Sequence
+
+from .abstraction import WaitStrategy
+
+# A "volatile-read unit" for backoff sleeps (paper: I * t_volatile_read).
+# On this host a plain attribute read is ~50ns; time.sleep granularity makes
+# the effective floor ~50us, which plays the same role as the paper's
+# DRAM-latency floor on Tesla.
+_BACKOFF_UNIT_S = 5e-6
+
+
+class Backoff:
+    """Paper Section 5 backoff: sleep I units, I in [i_min, i_max], wrap."""
+
+    __slots__ = ("i_min", "i_max", "_i")
+
+    def __init__(self, i_min: int = 1, i_max: int = 64):
+        self.i_min = i_min
+        self.i_max = i_max
+        self._i = i_min
+
+    def pause(self) -> None:
+        time.sleep(self._i * _BACKOFF_UNIT_S)
+        self._i += 1
+        if self._i > self.i_max:
+            self._i = self.i_min
+
+    def reset(self) -> None:
+        self._i = self.i_min
+
+
+class AtomicWord:
+    """A word of shared memory with atomic RMW ops (the paper's substrate).
+
+    ``exch``/``fetch_add`` are the expensive serializing operations;
+    ``load``/``store`` are the cheap "volatile" accesses (plain int
+    reads/writes are atomic under the GIL, like 4-byte aligned accesses on
+    the GPU — torn reads are impossible, coherence is immediate).
+    """
+
+    __slots__ = ("_lock", "value")
+
+    def __init__(self, value: int = 0):
+        self._lock = threading.Lock()
+        self.value = value
+
+    def exch(self, new: int) -> int:
+        with self._lock:
+            old = self.value
+            self.value = new
+            return old
+
+    def fetch_add(self, delta: int = 1) -> int:
+        with self._lock:
+            old = self.value
+            self.value = old + delta
+            return old
+
+    def load(self) -> int:          # volatile load
+        return self.value
+
+    def store(self, new: int) -> None:  # volatile store
+        self.value = new
+
+
+def _wait(poll: Callable[[], bool], strategy: WaitStrategy,
+          backoff: Optional[Backoff], timeout: Optional[float]) -> bool:
+    """Shared wait loop. Returns False on timeout."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    bo = backoff or Backoff()
+    while not poll():
+        if deadline is not None and time.monotonic() > deadline:
+            return False
+        if strategy is WaitStrategy.SPIN:
+            continue
+        bo.pause()
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Mutexes
+# ---------------------------------------------------------------------------
+
+class SpinMutex:
+    """Paper Algorithm 1/2: atomicExch spin lock (optional backoff)."""
+
+    def __init__(self, strategy: WaitStrategy = WaitStrategy.SPIN_BACKOFF):
+        self._word = AtomicWord(0)
+        self._strategy = strategy
+
+    def lock(self, timeout: Optional[float] = None) -> bool:
+        bo = Backoff()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self._word.exch(1) == 0:
+                return True
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            if self._strategy is not WaitStrategy.SPIN:
+                bo.pause()
+
+    def unlock(self) -> None:
+        self._word.store(0)  # volatile store, no atomic (Alg. 2)
+
+    def __enter__(self):
+        self.lock()
+        return self
+
+    def __exit__(self, *exc):
+        self.unlock()
+        return False
+
+
+class TicketMutex:
+    """Paper Algorithm 3: fetch-and-add mutex — one atomic to lock, zero to
+    unlock, FIFO-fair. The waiting is "GPU sleeping": polling a plain int.
+    """
+
+    def __init__(self, strategy: WaitStrategy = WaitStrategy.SLEEP):
+        self._ticket = AtomicWord(0)
+        self._turn = 0  # written only by the lock owner; read by waiters
+        self._strategy = strategy
+
+    def lock(self, timeout: Optional[float] = None) -> bool:
+        my = self._ticket.fetch_add(1)
+        ok = _wait(lambda: self._turn == my, self._strategy,
+                   Backoff(1, 8), timeout)
+        if not ok:
+            # A timed-out waiter must still consume its turn when it comes,
+            # or every later ticket deadlocks; simplest safe policy at the
+            # control-plane level: block until granted, then release.
+            _wait(lambda: self._turn == my, WaitStrategy.SPIN_BACKOFF,
+                  Backoff(1, 8), None)
+            self._turn = my + 1
+            return False
+        return True
+
+    def unlock(self) -> None:
+        self._turn += 1  # owner-only write; no atomic needed
+
+    def __enter__(self):
+        self.lock()
+        return self
+
+    def __exit__(self, *exc):
+        self.unlock()
+        return False
+
+
+class FutexMutex:
+    """The Linux-style spin-then-block mutex (paper Section 2.1/5).
+
+    Impossible on the GPU (no blocking); on the host it is the natural
+    endpoint of the paper's spectrum: a short aggressive spin, then a real
+    OS block on a condition variable.
+    """
+
+    def __init__(self, spin_tries: int = 100):
+        self._word = AtomicWord(0)
+        self._cond = threading.Condition()
+        self._spin_tries = spin_tries
+
+    def lock(self, timeout: Optional[float] = None) -> bool:
+        for _ in range(self._spin_tries):
+            if self._word.exch(1) == 0:
+                return True
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._word.exch(1) != 0:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                self._cond.wait(timeout=remaining if remaining else 0.05)
+            return True
+
+    def unlock(self) -> None:
+        self._word.store(0)
+        with self._cond:
+            self._cond.notify(1)
+
+    def __enter__(self):
+        self.lock()
+        return self
+
+    def __exit__(self, *exc):
+        self.unlock()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Semaphores
+# ---------------------------------------------------------------------------
+
+class SleepingSemaphore:
+    """Paper Algorithm 5: count/ticket/turn FA semaphore.
+
+    wait(): 1 atomic under capacity (2 over); post(): 1-2 atomics, never
+    waits. FIFO-fair among over-capacity waiters.
+    """
+
+    def __init__(self, initial: int,
+                 strategy: WaitStrategy = WaitStrategy.SLEEP):
+        if initial < 1:
+            raise ValueError("semaphore capacity must be >= 1")
+        self.capacity = initial
+        self._count = AtomicWord(0)
+        self._ticket = AtomicWord(0)
+        self._turn = AtomicWord(0)  # atomically incremented by posters
+        self._strategy = strategy
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        old = self._count.fetch_add(1)
+        if old < self.capacity:
+            return True
+        my = self._ticket.fetch_add(1)
+        ok = _wait(lambda: self._turn.load() > my, self._strategy,
+                   Backoff(1, 8), timeout)
+        if not ok:
+            # Roll back: we never entered. Undo the count and burn our
+            # ticket when it arrives (same policy as TicketMutex.lock).
+            _wait(lambda: self._turn.load() > my,
+                  WaitStrategy.SPIN_BACKOFF, Backoff(1, 8), None)
+            self._do_post()
+            return False
+        return True
+
+    def _do_post(self) -> None:
+        old = self._count.fetch_add(-1)
+        if old > self.capacity:
+            self._turn.fetch_add(1)
+
+    def post(self) -> None:
+        self._do_post()
+
+    def __enter__(self):
+        self.wait()
+        return self
+
+    def __exit__(self, *exc):
+        self.post()
+        return False
+
+
+class SpinSemaphore:
+    """Paper Algorithm 4: atomicExch spin semaphore (baseline)."""
+
+    def __init__(self, initial: int,
+                 strategy: WaitStrategy = WaitStrategy.SPIN_BACKOFF):
+        self.capacity = initial
+        self._word = AtomicWord(initial + 1)
+        self._strategy = strategy
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        bo = Backoff()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            old = self._word.exch(0)
+            if old > 1:
+                self._word.exch(old - 1)
+                return True
+            if old == 1:
+                self._word.exch(1)
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            if self._strategy is not WaitStrategy.SPIN:
+                bo.pause()
+
+    def post(self) -> None:
+        while True:  # post() is aggressive — no backoff (paper note)
+            old = self._word.exch(0)
+            if old > 0:
+                self._word.exch(old + 1)
+                return
+
+
+# ---------------------------------------------------------------------------
+# Barriers
+# ---------------------------------------------------------------------------
+
+class XFBarrier:
+    """Xiao-Feng decentralized flag barrier, host edition (paper Section 5).
+
+    Epoch-numbered arrive/release flags, one word per participant (so every
+    write is to the writer's own word — no atomics anywhere). Participant 0
+    is the master: it scans arrive flags and then broadcasts release flags.
+    Reusable across epochs without re-zeroing.
+    """
+
+    def __init__(self, parties: int,
+                 strategy: WaitStrategy = WaitStrategy.SPIN_BACKOFF):
+        if parties < 1:
+            raise ValueError("parties must be >= 1")
+        self.parties = parties
+        self._arrive: List[int] = [0] * parties
+        self._release: List[int] = [0] * parties
+        self._epochs: List[int] = [0] * parties  # per-participant epoch
+        self._strategy = strategy
+
+    def arrive_and_wait(self, rank: int,
+                        timeout: Optional[float] = None) -> bool:
+        epoch = self._epochs[rank] + 1
+        self._epochs[rank] = epoch
+        self._arrive[rank] = epoch
+        bo = Backoff(1, 16)
+        if rank == 0:
+            ok = _wait(
+                lambda: all(a >= epoch for a in self._arrive),
+                self._strategy, bo, timeout,
+            )
+            if not ok:
+                return False
+            for i in range(self.parties):
+                self._release[i] = epoch
+            return True
+        return _wait(lambda: self._release[rank] >= epoch,
+                     self._strategy, bo, timeout)
+
+    def waiting_on(self, rank_epoch: Optional[int] = None) -> List[int]:
+        """Ranks that have not yet arrived at the master's current epoch —
+        the straggler set the coordinator reports."""
+        epoch = rank_epoch if rank_epoch is not None else self._epochs[0]
+        return [i for i, a in enumerate(self._arrive) if a < epoch]
+
+
+class CentralizedBarrier:
+    """Two-stage atomic-counter barrier (the paper's baseline)."""
+
+    def __init__(self, parties: int,
+                 strategy: WaitStrategy = WaitStrategy.SPIN_BACKOFF):
+        self.parties = parties
+        self._count = AtomicWord(0)
+        self._generation = 0
+        self._strategy = strategy
+
+    def arrive_and_wait(self, rank: int = 0,
+                        timeout: Optional[float] = None) -> bool:
+        gen = self._generation
+        if self._count.fetch_add(1) == self.parties - 1:
+            self._count.store(0)
+            self._generation = gen + 1
+            return True
+        return _wait(lambda: self._generation != gen, self._strategy,
+                     Backoff(1, 16), timeout)
+
+
+def make_mutex(kind: str = "auto", **kw):
+    """Unified constructor mirroring the paper's API table (Table 4)."""
+    if kind == "auto":
+        kind = "futex"  # hosts can block; the futex is the host optimum
+    return {"spin": SpinMutex, "fa": TicketMutex, "ticket": TicketMutex,
+            "futex": FutexMutex}[kind](**kw)
+
+
+def make_semaphore(initial: int, kind: str = "auto", **kw):
+    if kind == "auto":
+        kind = "sleeping"
+    return {"spin": SpinSemaphore, "sleeping": SleepingSemaphore}[kind](initial, **kw)
+
+
+def make_barrier(parties: int, kind: str = "auto", **kw):
+    if kind == "auto":
+        kind = "xf"
+    return {"xf": XFBarrier, "centralized": CentralizedBarrier}[kind](parties, **kw)

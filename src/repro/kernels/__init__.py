@@ -1,0 +1,17 @@
+# Pallas TPU kernels for the paper's synchronization hot spots, each with
+# kernel.py (pl.pallas_call + explicit BlockSpec), ops.py (jit'd wrapper)
+# and ref.py (pure-jnp oracle), validated under interpret=True on CPU:
+#
+#   xf_barrier/   — Xiao-Feng decentralized flag barrier w/ timeout +
+#                   straggler bitmap (single-owner masked vector writes)
+#   ticket_lock/  — fetch-and-add mutex; FIFO grant order + mutual-exclusion
+#                   -sensitive affine chain
+#   semaphore/    — sleeping (count/ticket/turn) semaphore as deterministic
+#                   K-server FIFO admission planning (used by serving)
+#   membench/     — the paper's Section-3 memory benchmarks adapted to TPU
+#                   HBM access patterns (contentious/noncontentious x r/w)
+
+from repro.kernels.membench.ops import membench  # noqa: F401
+from repro.kernels.semaphore.ops import semaphore_admission  # noqa: F401
+from repro.kernels.ticket_lock.ops import ticket_lock_run  # noqa: F401
+from repro.kernels.xf_barrier.ops import fresh_flags, xf_barrier  # noqa: F401

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the membench kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def membench_ref(buf, n_steps: int, *, contentious: bool, write: bool,
+                 repeats: int = 16):
+    """Reproduce the kernel's final buffer and per-step checksums exactly.
+
+    Sequential-grid semantics: steps execute in order 0..n_steps-1.
+    write: step i stores (it + i + 1) for it in [0, repeats) to its row —
+      the row ends at (repeats - 1 + i + 1) = repeats + i.
+    read: step i sums its row `repeats` times; rows never change, so the
+      checksum is repeats * row_sum of the *initial* buffer.
+    """
+    buf = buf.astype(jnp.float32)
+    lane = buf.shape[1]
+
+    if write:
+        out = buf
+        sums = []
+        for i in range(n_steps):
+            row = 0 if contentious else i
+            final_val = jnp.float32(repeats + i)
+            out = out.at[row, :].set(final_val)
+            sums.append(final_val * lane)
+        return out, jnp.asarray(sums, jnp.float32)
+
+    sums = []
+    for i in range(n_steps):
+        row = 0 if contentious else i
+        sums.append(repeats * jnp.sum(buf[row, :]))
+    return buf, jnp.asarray(sums, jnp.float32)

@@ -1,0 +1,26 @@
+"""Jitted public API for the sleeping-semaphore kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import sleeping_semaphore_pallas
+from .ref import sleeping_semaphore_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "interpret", "use_kernel"))
+def semaphore_admission(arrive_t, hold, *, capacity: int,
+                        interpret: bool = True, use_kernel: bool = True):
+    """Plan admission of N FIFO requests under a concurrency budget K.
+
+    Returns (grant_times, release_times, waited) — the deterministic
+    timeline of the paper's Algorithm 5 sleeping semaphore. Used by the
+    serving scheduler for continuous-batching admission planning.
+    """
+    if use_kernel:
+        return sleeping_semaphore_pallas(
+            arrive_t, hold, capacity, interpret=interpret)
+    return sleeping_semaphore_ref(arrive_t, hold, capacity)

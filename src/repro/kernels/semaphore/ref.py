@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the sleeping-semaphore kernel (K-server FIFO)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sleeping_semaphore_ref(arrive_t, hold, capacity: int):
+    """K-server FIFO queue semantics of the paper's Algorithm 5 semaphore.
+
+    Request i is granted at max(arrival_i, earliest slot free time); the
+    earliest-free slot is then occupied until grant + hold.
+    Returns (grant_times, release_times, waited).
+    """
+    arrive_t = arrive_t.astype(jnp.float32)
+    hold = hold.astype(jnp.float32)
+    big = jnp.float32(3.4e38)
+    slots0 = jnp.full((capacity,), -big, jnp.float32)
+
+    def step(slots, ah):
+        arr, h = ah
+        free_t = jnp.min(slots)
+        waited = free_t > arr
+        g = jnp.maximum(arr, free_t)
+        r = g + h
+        idx = jnp.argmin(slots)
+        slots = slots.at[idx].set(r)
+        return slots, (g, r, waited.astype(jnp.int32))
+
+    _, (grant, release, waited) = jax.lax.scan(step, slots0, (arrive_t, hold))
+    return grant, release, waited

@@ -1,0 +1,20 @@
+"""Jitted public API for the ticket-lock kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ticket_lock_pallas
+from .ref import ticket_lock_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def ticket_lock_run(arrival, m, b, *, interpret: bool = True,
+                    use_kernel: bool = True):
+    """Process N lock requests in ``arrival`` order under a FIFO ticket
+    mutex; returns (grant_order, turn_trace, acc)."""
+    if use_kernel:
+        return ticket_lock_pallas(arrival, m, b, interpret=interpret)
+    return ticket_lock_ref(arrival, m, b)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the ticket-lock kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ticket_lock_ref(arrival, m, b):
+    """FIFO ticket mutex semantics.
+
+    Requesters acquire in arrival order: grant_order == arrival, the
+    observed turn equals the ticket (0..N-1), and the critical-section
+    affine chain folds in arrival order.
+    """
+    arrival = arrival.astype(jnp.int32)
+    n = arrival.shape[0]
+    grant_order = arrival
+    turn_trace = jnp.arange(n, dtype=jnp.int32)
+
+    def step(acc, mb):
+        m_i, b_i = mb
+        return acc * m_i + b_i, None
+
+    acc, _ = jax.lax.scan(
+        step, jnp.float32(0.0),
+        (m.astype(jnp.float32), b.astype(jnp.float32)))
+    return grant_order, turn_trace, acc

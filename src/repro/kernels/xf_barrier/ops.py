@@ -1,0 +1,40 @@
+"""Jitted public API for the XF barrier kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import xf_barrier_pallas
+from .ref import xf_barrier_ref
+
+
+@functools.partial(jax.jit, static_argnames=("max_polls", "interpret", "use_kernel"))
+def xf_barrier(
+    arrive: jax.Array,
+    epoch: jax.Array,
+    present: jax.Array,
+    required: jax.Array,
+    *,
+    max_polls: int = 1024,
+    interpret: bool = True,
+    use_kernel: bool = True,
+):
+    """One XF barrier epoch over flag words.
+
+    Returns ``(arrive', release, done, stragglers)``. ``use_kernel=False``
+    routes through the pure-jnp reference (used on back ends without
+    Pallas TPU support).
+    """
+    if use_kernel:
+        return xf_barrier_pallas(
+            arrive, epoch, present, required,
+            max_polls=max_polls, interpret=interpret)
+    return xf_barrier_ref(arrive, epoch, present, required,
+                          max_polls=max_polls)
+
+
+def fresh_flags(n: int) -> jax.Array:
+    return jnp.zeros((n,), jnp.int32)

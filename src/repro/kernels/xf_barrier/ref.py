@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the XF barrier kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def xf_barrier_ref(arrive, epoch, present, required, *, max_polls: int = 1024):
+    """Reference semantics of one barrier epoch.
+
+    ``present`` slots write their flag (= epoch); the master checks that all
+    ``required`` slots' flags have reached the epoch. A required slot that
+    is not present (a dead host) leaves the barrier incomplete: done = 0,
+    release flags untouched, and the slot appears in the straggler bitmap.
+    """
+    del max_polls
+    arrive = arrive.astype(jnp.int32)
+    pres = present.astype(jnp.int32) > 0
+    req = required.astype(jnp.int32) > 0
+    epoch = jnp.asarray(epoch, jnp.int32)
+
+    new_arrive = jnp.where(pres, epoch, arrive)
+    arrived = jnp.all(jnp.where(req, new_arrive >= epoch, True))
+    done = arrived.astype(jnp.int32)
+    stragglers = jnp.where(req & (new_arrive < epoch), 1, 0)
+    release = jnp.where(req & arrived, epoch, jnp.zeros_like(arrive))
+    return new_arrive, release, done, stragglers

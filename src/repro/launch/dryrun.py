@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes and extract the roofline terms.
+
+For each cell this script:
+  1. builds the model's parameter/batch/cache ShapeDtypeStructs (zero
+     allocation anywhere);
+  2. derives shardings from the logical axes (sharding/rules.py) — FSDP
+     kicks in when bf16 params / TP > 4 GB/chip;
+  3. ``jax.jit(step).lower(...).compile()`` on the requested mesh
+     ((16,16) single-pod and (2,16,16) multi-pod);
+  4. records memory_analysis / cost_analysis / parsed collective bytes to
+     JSON under artifacts/dryrun/ — benchmarks/roofline_report.py and
+     EXPERIMENTS.md read from there.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo_stats
+from repro.analysis import roofline as rl
+from repro.configs import ARCHS, get_arch
+from repro.configs.shapes import ALL_SHAPES, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import batch_specs, build_model, cache_specs, decode_token_spec
+from repro.models.common import count_params, shape_params
+from repro.sharding import rules as shr
+from repro.sharding import act
+from repro.train import optimizer as opt
+from repro.train.train_loop import make_train_step
+
+FSDP_THRESHOLD_BYTES = 4 << 30  # per-chip bf16 param budget before FSDP
+
+
+def pick_rules(cfg, shape, mesh) -> shr.ShardingRules:
+    n_params = count_params(build_model(cfg).spec_tree())
+    tp = mesh.shape.get("model", 1)
+    fsdp = (2 * n_params / tp) > FSDP_THRESHOLD_BYTES
+    cp = shape.mode == "decode" and shape.global_batch == 1
+    return shr.ShardingRules(fsdp=fsdp, context_parallel=cp)
+
+
+def pick_opt_cfg(cfg) -> opt.AdamWConfig:
+    n_params = count_params(build_model(cfg).spec_tree())
+    if n_params > 50e9:  # factored state for the XXL cells (DESIGN.md §3)
+        return opt.AdamWConfig(factored_second_moment=True,
+                               momentum_dtype="bfloat16")
+    return opt.AdamWConfig()
+
+
+ACT_BUDGET_BYTES = 6 << 30  # per-chip budget for saved layer boundaries
+
+
+def pick_microbatches(cfg, shape, mesh=None) -> int:
+    """Gradient-accumulation factor from the activation-memory model.
+
+    With per-period remat, the live activation state is one boundary
+    tensor [tokens_mb/chips_dp, d_model] per scan period (+ leftovers);
+    nmb is the smallest batch divisor keeping that under ACT_BUDGET.
+    (§Perf iteration 3 replaced the old params-size heuristic: it both
+    under-provisioned 80L dense models and over-provisioned jamba.)
+    """
+    if os.environ.get("REPRO_NMB"):  # §Perf iteration override
+        return int(os.environ["REPRO_NMB"])
+    dp = 16 if mesh is None else (
+        mesh.devices.size // mesh.shape.get("model", 1))
+    tokens_per_dev = shape.tokens // dp
+    n_periods, pattern, leftover = cfg.periods()
+    n_boundaries = n_periods + len(leftover) + (
+        cfg.encoder_layers if cfg.is_encdec else 0)
+    # two-level remat (models/lm.py): NG group boundaries live for the
+    # whole step + G transient ones during a group's backward recompute
+    if n_periods >= 16 and not cfg.is_encdec and not os.environ.get(
+            "REPRO_FLAT_REMAT"):
+        g = 1
+        for d in range(2, int(n_periods ** 0.5) + 1):
+            if n_periods % d == 0:
+                g = d
+        if g > 1:
+            n_boundaries = n_periods // g + g + len(leftover)
+    boundary_bytes = n_boundaries * tokens_per_dev * cfg.d_model * 2
+    nmb = 1
+    while boundary_bytes / nmb > ACT_BUDGET_BYTES and nmb < shape.global_batch:
+        nmb *= 2
+    return nmb
+
+
+def _opt_state_shardings(params_shardings, opt_cfg, params_sds, mesh):
+    """Moments inherit parameter specs; factored moments drop trailing dims."""
+    def v_for(psh, sds):
+        if opt._is_factored(opt_cfg, sds.shape):
+            spec = psh.spec
+            row = P(*spec[:-1])
+            col = P(*(tuple(spec[:-2]) + (spec[-1],)))
+            return {"row": NamedSharding(mesh, row),
+                    "col": NamedSharding(mesh, col)}
+        return psh
+
+    m_sh = params_shardings
+    v_sh = jax.tree_util.tree_map(v_for, params_shardings, params_sds)
+    return opt.AdamWState(
+        count=NamedSharding(mesh, P()),
+        m=m_sh, v=v_sh)
+
+
+def _opt_state_sds(opt_cfg, params_sds):
+    def m_for(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(opt_cfg.momentum_dtype))
+
+    def v_for(s):
+        if opt._is_factored(opt_cfg, s.shape):
+            return {"row": jax.ShapeDtypeStruct(s.shape[:-1], jnp.float32),
+                    "col": jax.ShapeDtypeStruct(
+                        s.shape[:-2] + s.shape[-1:], jnp.float32)}
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+
+    return opt.AdamWState(
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree_util.tree_map(m_for, params_sds),
+        v=jax.tree_util.tree_map(v_for, params_sds))
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Optional[str] = None, mesh=None,
+             rules_override=None, save_hlo: bool = False) -> dict:
+    cfg = get_arch(arch_name)
+    shape = ALL_SHAPES[shape_name]
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    model = build_model(cfg)
+    rules = rules_override or pick_rules(cfg, shape, mesh)
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    seq_axes = ("data",) if rules.context_parallel else ()
+
+    t0 = time.time()
+    # Specs AND tracing happen under the activation-sharding policy: the
+    # head plan (possible head padding) must agree between the parameter
+    # spec and the traced apply code.
+    with mesh, act.activation_sharding(mesh, batch_axes, seq_axes):
+        spec_tree = model.spec_tree()
+        params_sds = shape_params(spec_tree)
+        params_sh = shr.params_shardings(spec_tree, rules, mesh)
+        if shape.mode == "train":
+            ocfg = pick_opt_cfg(cfg)
+            nmb = pick_microbatches(cfg, shape, mesh)
+            step = make_train_step(model, ocfg, num_microbatches=nmb,
+                                   remat=True)
+            batch_sds = batch_specs(cfg, shape)
+            batch_sh = shr.batch_shardings(batch_sds, rules, mesh)
+            opt_sds = _opt_state_sds(ocfg, params_sds)
+            opt_sh = _opt_state_shardings(params_sh, ocfg, params_sds, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif shape.mode == "prefill":
+            batch_sds = batch_specs(cfg, shape)
+            batch_sh = shr.batch_shardings(batch_sds, rules, mesh)
+
+            def prefill_logits(params, batch):
+                # the compute-relevant prefill: full forward (the k/v cache
+                # tensors are materialized inside; logits for last token)
+                if cfg.is_encdec:
+                    out, _ = model.prefill(params, batch)
+                    return out
+                logits, _ = model.forward(params, batch)
+                return logits[:, -1]
+
+            jitted = jax.jit(prefill_logits,
+                             in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            cache_sds = cache_specs(cfg, shape, model)
+            cache_sh = shr.cache_shardings(cache_sds, rules, mesh, cfg)
+            tok_sds = decode_token_spec(cfg, shape)
+            tok_sh = NamedSharding(
+                mesh, shr.batch_pspec(rules, mesh, len(tok_sds.shape),
+                                      batch_size=tok_sds.shape[0]))
+
+            def serve_step(params, cache, token):
+                return model.decode_step(params, cache, token)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(params_sh, cache_sh, tok_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds)
+    lower_s = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # Trip-count-aware accounting (analysis/hlo_stats): XLA's cost_analysis
+    # counts while (scan) bodies once; ours multiplies by known_trip_count.
+    stats = hlo_stats.analyze(hlo, n_devices=mesh.devices.size)
+
+    n_total, n_active = rl.count_total_and_active_params(cfg)
+    chips = mesh.devices.size
+    mem_dict = {
+        k: getattr(mem, k, None) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    }
+    roof = rl.Roofline(
+        arch=arch_name, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=stats.total_flops,
+        bytes_per_device=stats.hbm_bytes_opt,
+        collective_wire_bytes=stats.collective_wire_bytes,
+        collectives=stats.collectives,
+        model_flops_total=rl.model_flops(cfg, shape, n_total, n_active),
+        memory_per_device=mem_dict,
+    )
+
+    record = roof.to_json()
+    record.update({
+        "rules": {"fsdp": rules.fsdp, "context_parallel": rules.context_parallel},
+        "lower_s": lower_s, "compile_s": compile_s,
+        "params_total": n_total, "params_active": n_active,
+        "hlo_bytes": len(hlo),
+        "xla_cost_flops_per_device_body_once": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes_per_device_body_once": float(
+            cost.get("bytes accessed", 0.0)),
+        "dot_flops_per_device": stats.flops,
+        "elementwise_flops_per_device": stats.elementwise_flops,
+        "hbm_bytes_upper_per_device": stats.hbm_bytes,
+    })
+    print(f"[dryrun] {arch_name:24s} {shape_name:12s} mesh={mesh_name:9s} "
+          f"flops/dev={roof.flops_per_device:.3e} "
+          f"coll={roof.collective_wire_bytes:.3e}B "
+          f"bottleneck={roof.bottleneck:10s} "
+          f"(lower {lower_s:.0f}s compile {compile_s:.0f}s)")
+    print(f"        memory/device: {mem_dict}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch_name}__{shape_name}__{mesh_name}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(record, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, fn.replace(".json", ".hlo")), "w") as f:
+                f.write(hlo)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for name, cfg in ARCHS.items():
+            for shp in shapes_for(cfg):
+                cells.append((name, shp.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch_name, shape_name in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch_name, shape_name, multi_pod=mp, out_dir=args.out,
+                         save_hlo=args.save_hlo)
+            except Exception as e:  # a failure here is a bug in the system
+                failures.append((arch_name, shape_name, mp, repr(e)))
+                print(f"[dryrun] FAIL {arch_name} {shape_name} multi_pod={mp}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(meshes)} dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing this module never touches
+jax device state; the dry-run sets XLA_FLAGS for 512 host devices *before*
+any jax import, and smoke tests see the default single device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_small_mesh(n_data: int = 2, n_model: int = 4) -> Mesh:
+    """Reduced mesh for in-CI dry-run tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

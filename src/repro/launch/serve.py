@@ -1,0 +1,97 @@
+"""Serving driver: batched generation behind semaphore admission control.
+
+Demonstrates the full serving path on a reduced config: an engine replica
+with a KV-cache concurrency budget, the paper's sleeping-semaphore
+admission controller gating requests FIFO-fairly, and the continuous
+batcher recycling slots.
+
+  python -m repro.launch.serve --arch qwen3-14b --smoke \
+      --requests 32 --capacity 8 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatcher, Request, plan_admission
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    if cfg.is_encdec or cfg.frontend is not None:
+        raise SystemExit("serve.py drives token-LM archs")
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.new_tokens + 1
+    engine = ServeEngine(model, params, max_len=max_len)
+
+    # Slot-state per active request (reduced demo: one cache per request;
+    # a production replica uses one batched cache + slot indices).
+    key = jax.random.PRNGKey(args.seed)
+    prompts = jax.random.randint(
+        key, (args.requests, args.prompt_len), 0, cfg.vocab_size)
+
+    # --- admission plan (paper Algorithm 5 as the planning kernel)
+    service_est = np.full(args.requests, float(args.new_tokens), np.float32)
+    arrivals = np.arange(args.requests, dtype=np.float32) * 0.1
+    plan = plan_admission(arrivals, service_est, args.capacity)
+    print(f"[serve] admission plan: p50 wait {plan.p50_wait:.1f} "
+          f"p99 {plan.p99_wait:.1f} makespan {plan.makespan:.1f} "
+          f"queued {int(plan.waited.sum())}/{args.requests}")
+
+    caches = {}
+    steps_done = {}
+    outputs = {r: [] for r in range(args.requests)}
+
+    def decode_batch(rids):
+        finished = []
+        for rid in rids:  # reduced demo decodes per-slot; jit caches by shape
+            logits, cache = engine._decode(params, caches[rid],
+                                           outputs[rid][-1])
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            caches[rid] = cache
+            outputs[rid].append(tok)
+            steps_done[rid] += 1
+            finished.append(steps_done[rid] >= args.new_tokens)
+        return finished
+
+    batcher = ContinuousBatcher(args.capacity, decode_batch)
+    t0 = time.time()
+    for rid in range(args.requests):
+        logits, cache = engine.prefill({"tokens": prompts[rid: rid + 1]})
+        caches[rid] = cache
+        outputs[rid] = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
+        steps_done[rid] = 0
+        batcher.submit(Request(rid=rid, prompt_len=args.prompt_len,
+                               max_new_tokens=args.new_tokens))
+    ticks = batcher.drain()
+    dt = time.time() - t0
+    total_tokens = sum(len(v) for v in outputs.values())
+    print(f"[serve] {args.requests} requests, {total_tokens} tokens in "
+          f"{dt:.1f}s ({total_tokens / dt:,.0f} tok/s), {ticks} ticks, "
+          f"finished {len(batcher.finished)}")
+
+
+if __name__ == "__main__":
+    main()

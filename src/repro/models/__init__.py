@@ -1,0 +1,9 @@
+# LM model zoo: dense GQA / MoE / Mamba / hybrid / encoder-decoder / VLM
+# backbones as pure-pytree functional models with logical sharding axes.
+from repro.models.model_zoo import (  # noqa: F401
+    batch_specs,
+    build_model,
+    cache_specs,
+    decode_token_spec,
+    make_batch,
+)

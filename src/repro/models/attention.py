@@ -1,0 +1,391 @@
+"""GQA attention: TP-aware head planning + chunked prefill + cached decode.
+
+Tensor-parallel head planning (the part that makes the roofline honest —
+see DESIGN.md §6): with TP = |model| = 16, several assigned archs have
+head counts that don't divide it (qwen3 40H, minitron 24H, whisper 12H,
+gemma3 4H). Plans, chosen per (arch, mesh) via ``head_plan``:
+
+  'shard'  heads % tp == 0 — shard heads; GQA handled by *expanding* K/V
+           to one head per query head (``expand_kv`` — the repeat_kv trick:
+           keeps every attention tensor rank-4 and head-sharded even when
+           kv_heads < tp, at per-device K/V cost equal to the original).
+  'pad'    pad query heads with zeros to the next tp multiple when the
+           waste is <= 1.5x (qwen3 40->48: 1.2x; minitron 24->32, whisper
+           12->16: 1.33x). Correctness: padded heads produce garbage
+           attention outputs, but the output projection contracts with a
+           zero-padded wo, so their contribution is exactly zero.
+  'seq'    too few heads to pad (gemma3 4H): replicate attention weights
+           and shard the *sequence* dimension of the scores instead
+           (activation constraint), computing masked rectangle chunks
+           (2x triangle FLOPs); local sliding-window layers instead use
+           the banded gather path with exact O(S*W) FLOPs.
+
+Train/prefill paths are differentiable by construction (static scans, no
+dynamic-bound loops):
+
+  * ``blocked_attention``  — static (q-block, kv-block) schedule covering
+    only the causal lower triangle / window band: exact-triangle FLOPs.
+  * ``kv_chunked_attention`` — online softmax over kv chunks with the full
+    query resident (seq-shardable; rectangle FLOPs).
+  * ``banded_attention``   — gather a [S, W] band of K/V; exact window.
+
+Decode attends the full cache in one einsum (linear in cache length).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.act import constrain_seq_model, current_tp
+
+from .common import spec
+from .layers import head_rmsnorm, head_rmsnorm_spec, rope
+
+NEG_INF = -2.0e38
+
+
+def attention_spec(cfg, dtype):
+    """Physical parameter spec. Under a 'pad' head plan the q/o projections
+    are stored with `hp` (tp-aligned) heads; the extra rows are masked to
+    zero at apply time (``attention_out``), so they are mathematically
+    inert — pure sharding padding. The plan is read from the active
+    activation-sharding policy, so specs built while lowering for a mesh
+    and specs built for single-device tests are each self-consistent.
+    """
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    plan, hp = head_plan(h)
+    hq = hp if plan == "pad" else h
+    p = {
+        "wq": spec((d, hq, hd), ("embed", "heads", "head_dim"), dtype=dtype),
+        "wk": spec((d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": spec((d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": spec((hq, hd, d), ("heads", "head_dim", "embed"), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = spec((hq, hd), ("heads", "head_dim"), dtype=dtype, init="zeros")
+        p["bk"] = spec((kv, hd), ("kv_heads", "head_dim"), dtype=dtype, init="zeros")
+        p["bv"] = spec((kv, hd), ("kv_heads", "head_dim"), dtype=dtype, init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = head_rmsnorm_spec(hd)
+        p["k_norm"] = head_rmsnorm_spec(hd)
+    return p
+
+
+# ---------------------------------------------------------------- planning
+def head_plan(n_heads: int, tp: Optional[int] = None) -> Tuple[str, int]:
+    """(plan, padded_heads) for this head count under tp-way sharding."""
+    tp = tp if tp is not None else current_tp()
+    if tp <= 1 or n_heads % tp == 0:
+        return "shard", n_heads
+    padded = -(-n_heads // tp) * tp
+    if padded <= 1.5 * n_heads:
+        return "pad", padded
+    return "seq", n_heads
+
+
+def expand_kv(kv: jax.Array, n_heads: int, pad_to: int = 0) -> jax.Array:
+    """[B,T,KV,hd] -> [B,T,H(p),hd]: one K/V head per query head (+ zero
+    heads for padding).
+
+    Implemented as broadcast+reshape (kv-major head layout, h -> kv = h//g)
+    rather than ``jnp.take``: a gather over a sharded kv-head axis makes
+    XLA all-gather the whole cache (a 2 GB/layer collective on the decode
+    cells — §Perf hillclimb 2), while broadcast/reshape keep the sharding.
+    """
+    b, t, kvh, hd = kv.shape
+    g = n_heads // kvh
+    if os.environ.get("REPRO_EXPAND_KV_GATHER"):  # §Perf baseline variant
+        out = jnp.take(kv, jnp.arange(n_heads) // g, axis=2)
+    elif g == 1:
+        out = kv
+    else:
+        out = jnp.broadcast_to(
+            kv[:, :, :, None, :], (b, t, kvh, g, hd)
+        ).reshape(b, t, kvh * g, hd)
+    if pad_to > n_heads:
+        out = jnp.pad(out, ((0, 0), (0, 0), (0, pad_to - n_heads), (0, 0)))
+    return out
+
+
+def pad_heads(q: jax.Array, pad_to: int) -> jax.Array:
+    h = q.shape[2]
+    if pad_to <= h:
+        return q
+    return jnp.pad(q, ((0, 0), (0, 0), (0, pad_to - h), (0, 0)))
+
+
+def _pick_chunk(s: int, target: int = 1024) -> int:
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+# -------------------------------------------------------------- projection
+def qkv_project(p, cfg, x, positions):
+    """x [B,S,D] -> q [B,S,H,hd], k/v [B,S,KV,hd] (rope + qk-norm applied)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_out(p, y, n_heads: int):
+    """y [B,S,Hq,hd] -> [B,S,D]. When the projection is head-padded, rows
+    >= n_heads of wo are masked to zero so the padded heads contribute
+    exactly nothing (and receive no functional gradient coupling)."""
+    wo = p["wo"]
+    hq = wo.shape[0]
+    if hq > n_heads:
+        mask = (jnp.arange(hq) < n_heads).astype(wo.dtype)
+        wo = wo * mask[:, None, None]
+    return jnp.einsum("bshk,hkd->bsd", y, wo)
+
+
+# ----------------------------------------------------- full-sequence paths
+def _pair_list(nq: int, nk: int, cq: int, ck: int, causal: bool,
+               window: Optional[int]):
+    """Static (q_block, kv_block) schedule: only blocks that can attend."""
+    pairs = []
+    for qi in range(nq):
+        if causal:
+            hi = qi + 1
+            lo = 0
+            if window is not None:
+                lo = max(0, (qi * cq - window + 1) // ck)
+            lo = min(lo, hi)
+        else:
+            lo, hi = 0, nk
+        for j in range(lo, hi):
+            pairs.append((qi, j))
+    return pairs
+
+
+def blocked_attention(
+    q: jax.Array,            # [B, S, H, hd]   (H already tp-aligned)
+    k: jax.Array,            # [B, T, H, hd]   (pre-expanded)
+    v: jax.Array,            # [B, T, H, hd]
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Static-schedule online-softmax attention; exact triangle/window
+    FLOPs; differentiable. Returns [B, S, H, hd]."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    cq = _pick_chunk(s, q_chunk)
+    ck = _pick_chunk(t, kv_chunk)
+    nq, nk = s // cq, t // ck
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = jnp.moveaxis((q * scale).reshape(b, nq, cq, h, hd), 1, 0)
+    iota_q = jnp.arange(cq)
+    iota_k = jnp.arange(ck)
+    pairs = jnp.asarray(_pair_list(nq, nk, cq, ck, causal, window), jnp.int32)
+
+    m0 = jnp.full((nq, b, cq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, cq, h), jnp.float32)
+    acc0 = jnp.zeros((nq, b, cq, h, hd), jnp.float32)
+
+    def body(state, pair):
+        m_all, l_all, acc_all = state
+        qi, j = pair[0], pair[1]
+        qb = jax.lax.dynamic_index_in_dim(qg, qi, 0, keepdims=False)
+        m = jax.lax.dynamic_index_in_dim(m_all, qi, 0, keepdims=False)
+        l = jax.lax.dynamic_index_in_dim(l_all, qi, 0, keepdims=False)
+        acc = jax.lax.dynamic_index_in_dim(acc_all, qi, 0, keepdims=False)
+        kc = jax.lax.dynamic_slice(k, (0, j * ck, 0, 0), (b, ck, h, hd))
+        vc = jax.lax.dynamic_slice(v, (0, j * ck, 0, 0), (b, ck, h, hd))
+
+        sc = jnp.einsum("bqhd,bchd->bqhc", qb, kc).astype(jnp.float32)
+        if causal:
+            qpos = qi * cq + iota_q
+            kpos = j * ck + iota_k
+            ok = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            sc = jnp.where(ok[None, :, None, :], sc, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhc,bchd->bqhd", p.astype(v.dtype), vc)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+
+        upd = lambda a, x: jax.lax.dynamic_update_index_in_dim(a, x, qi, 0)
+        return (upd(m_all, m_new), upd(l_all, l_new), upd(acc_all, acc_new)), 0
+
+    (m_all, l_all, acc_all), _ = jax.lax.scan(body, (m0, l0, acc0), pairs)
+    out = acc_all / jnp.maximum(l_all[..., None], 1e-37)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def kv_chunked_attention(
+    q: jax.Array,            # [B, S, H, hd]
+    k: jax.Array,            # [B, T, H, hd]
+    v: jax.Array,            # [B, T, H, hd]
+    *,
+    causal: bool,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online softmax over kv chunks with the full query resident — the
+    sequence dim stays intact, so an activation constraint can shard it
+    over the model axis ('seq' head plan). Rectangle FLOPs when causal."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    ck = _pick_chunk(t, kv_chunk)
+    nk = t // ck
+    scale = 1.0 / math.sqrt(hd)
+    qs = constrain_seq_model(q * scale)
+    qpos = jnp.arange(s)
+    iota_k = jnp.arange(ck)
+
+    m0 = constrain_seq_model(jnp.full((b, s, h), NEG_INF, jnp.float32))
+    l0 = constrain_seq_model(jnp.zeros((b, s, h), jnp.float32))
+    acc0 = constrain_seq_model(jnp.zeros((b, s, h, hd), jnp.float32))
+
+    def body(state, j):
+        m, l, acc = state
+        kc = jax.lax.dynamic_slice(k, (0, j * ck, 0, 0), (b, ck, h, hd))
+        vc = jax.lax.dynamic_slice(v, (0, j * ck, 0, 0), (b, ck, h, hd))
+        sc = jnp.einsum("bqhd,bchd->bqhc", qs, kc).astype(jnp.float32)
+        if causal:
+            kpos = j * ck + iota_k
+            ok = kpos[None, :] <= qpos[:, None]
+            sc = jnp.where(ok[None, :, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhc,bchd->bqhd", p.astype(v.dtype), vc)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (constrain_seq_model(m_new), constrain_seq_model(l_new),
+                constrain_seq_model(acc_new)), 0
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nk))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.astype(q.dtype)
+
+
+def banded_attention(
+    q: jax.Array,            # [B, S, H, hd]
+    k: jax.Array,            # [B, S, H, hd]
+    v: jax.Array,            # [B, S, H, hd]
+    *,
+    window: int,
+) -> jax.Array:
+    """Exact sliding-window attention via a gathered [S, W] K/V band —
+    O(S*W) FLOPs and memory, seq-shardable (local layers, 'seq' plan)."""
+    b, s, h, hd = q.shape
+    w = min(window, s)
+    scale = 1.0 / math.sqrt(hd)
+    pos = jnp.arange(s)
+    band = pos[:, None] - (w - 1) + jnp.arange(w)[None, :]   # [S, W]
+    valid = band >= 0
+    band_c = jnp.clip(band, 0, s - 1)
+
+    kb = jnp.take(k, band_c, axis=1)   # [B, S, W, H, hd]
+    vb = jnp.take(v, band_c, axis=1)
+    qs = constrain_seq_model(q * scale)
+    sc = jnp.einsum("bqhd,bqwhd->bqhw", qs, kb).astype(jnp.float32)
+    sc = jnp.where(valid[None, :, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqhw,bqwhd->bqhd", p.astype(v.dtype), vb)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ decode
+def decode_attention(
+    q: jax.Array,            # [B, 1, Hp, hd]
+    k_cache: jax.Array,      # [B, T, Hp, hd] (pre-expanded/padded)
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token attention over the cache (linear in T)."""
+    b, _, h, hd = q.shape
+    t = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    sc = jnp.einsum("bqhd,bthd->bqht", q * scale, k_cache).astype(jnp.float32)
+    pos = jnp.arange(t)
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim == 1 else cl[None, None]
+    valid = pos[None, :] < cl
+    if window is not None:
+        valid &= pos[None, :] >= cl - window
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqht,bthd->bqhd", p.astype(v_cache.dtype), v_cache)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------- dispatch
+def full_attention(p, cfg, q, k, v, *, causal: bool,
+                   window: Optional[int]) -> jax.Array:
+    """Pick the path from the head plan; q comes from the (possibly
+    head-padded) projection, so q.shape[2] is already tp-aligned under a
+    'pad' plan. Returns the pre-wo tensor [B,S,Hq,hd]."""
+    h = cfg.num_heads
+    plan, _ = head_plan(h)
+    hq = q.shape[2]
+    if plan in ("shard", "pad"):
+        ke = expand_kv(k, h, pad_to=hq)
+        ve = expand_kv(v, h, pad_to=hq)
+        return blocked_attention(q, ke, ve, causal=causal, window=window)
+    # 'seq' plan: replicated heads, sequence-sharded scores
+    ke = expand_kv(k, h)
+    ve = expand_kv(v, h)
+    if window is not None and causal:
+        return banded_attention(q, ke, ve, window=window)
+    return kv_chunked_attention(q, ke, ve, causal=causal)
+
+
+def cached_decode_attention(p, cfg, q, k_cache, v_cache, cache_len, *,
+                            window: Optional[int]) -> jax.Array:
+    h = cfg.num_heads
+    hq = q.shape[2]
+    ke = expand_kv(k_cache, h, pad_to=hq)
+    ve = expand_kv(v_cache, h, pad_to=hq)
+    return decode_attention(q, ke, ve, cache_len, window=window)
+
+
+def naive_reference_attention(q, k, v, *, causal, window=None):
+    """O(S^2)-memory GQA oracle used only by tests. q [B,S,H,hd];
+    k/v [B,T,KV,hd]."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    ke = expand_kv(k, h)
+    ve = expand_kv(v, h)
+    sc = jnp.einsum("bqhd,bthd->bqht", q, ke).astype(jnp.float32)
+    sc = sc / math.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        ok = kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        sc = jnp.where(ok[None, :, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqht,bthd->bqhd", p.astype(v.dtype), ve)
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,110 @@
+"""Transformer/Mamba block wiring: pre-norm mixer + pre-norm FFN/MoE.
+
+A *period* is one repetition of ``cfg.layer_pattern`` (e.g. jamba's
+[attn, mamba x7]); the LM scans over stacked periods so HLO size is O(1)
+in depth. Within a period, layers are unrolled (they are heterogeneous).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mb
+from . import moe as moe_mod
+from .layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec
+
+
+def block_spec(cfg, kind: str, use_moe: bool, dtype):
+    p = {"ln1": rmsnorm_spec(cfg.d_model)}
+    if kind == "mamba":
+        p["mixer"] = mb.mamba_spec(cfg, dtype)
+        # mamba1 blocks subsume the FFN: no second sublayer when d_ff == 0
+        if cfg.d_ff > 0:
+            p["ln2"] = rmsnorm_spec(cfg.d_model)
+            p["ffn"] = (moe_mod.moe_spec(cfg, dtype) if use_moe
+                        else mlp_spec(cfg.d_model, cfg.d_ff, cfg.activation, dtype))
+    else:
+        p["mixer"] = attn.attention_spec(cfg, dtype)
+        p["ln2"] = rmsnorm_spec(cfg.d_model)
+        p["ffn"] = (moe_mod.moe_spec(cfg, dtype) if use_moe
+                    else mlp_spec(cfg.d_model, cfg.d_ff, cfg.activation, dtype))
+    return p
+
+
+def _window_for(cfg, kind: str) -> Optional[int]:
+    return cfg.sliding_window if kind == "local" else None
+
+
+def block_forward(p, x, cfg, kind: str, use_moe: bool, positions,
+                  ) -> Tuple[jax.Array, Dict, Dict]:
+    """Full-sequence pass. Returns (x, cache_entry, aux)."""
+    aux = {}
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "mamba":
+        y, state = mb.mamba_forward(p["mixer"], h, cfg)
+        cache = {"conv": state[0], "h": state[1]}
+    else:
+        q, k, v = attn.qkv_project(p["mixer"], cfg, h, positions)
+        y = attn.full_attention(p["mixer"], cfg, q, k, v, causal=True,
+                                window=_window_for(cfg, kind))
+        y = attn.attention_out(p["mixer"], y, cfg.num_heads)
+        cache = {"k": k, "v": v}
+    x = x + y
+
+    if "ffn" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if use_moe:
+            y, aux = moe_mod.moe_ffn(p["ffn"], h, cfg)
+        else:
+            y = mlp(p["ffn"], h, cfg.activation)
+        x = x + y
+    return x, cache, aux
+
+
+def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token pass. x [B,1,D]; cache entry as built by block_forward
+    (k/v padded to max length for attention layers)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "mamba":
+        y, state = mb.mamba_decode_step(
+            p["mixer"], h, (cache["conv"], cache["h"]), cfg)
+        new_cache = {"conv": state[0], "h": state[1]}
+    else:
+        positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+        q, k, v = attn.qkv_project(p["mixer"], cfg, h, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        y = attn.cached_decode_attention(
+            p["mixer"], cfg, q, k_cache, v_cache, cache_len + 1,
+            window=_window_for(cfg, kind))
+        y = attn.attention_out(p["mixer"], y, cfg.num_heads)
+        new_cache = {"k": k_cache, "v": v_cache}
+    x = x + y
+
+    if "ffn" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if use_moe:
+            y, _ = moe_mod.moe_ffn(p["ffn"], h, cfg)
+        else:
+            y = mlp(p["ffn"], h, cfg.activation)
+        x = x + y
+    return x, new_cache
+
+
+def period_layout(cfg):
+    """[(kind, use_moe)] for one period, honoring moe.every_n_layers."""
+    out = []
+    for j, kind in enumerate(cfg.layer_pattern):
+        use_moe = False
+        if cfg.moe is not None:
+            n = cfg.moe.every_n_layers
+            use_moe = j % n == n - 1
+        out.append((kind, use_moe))
+    return out

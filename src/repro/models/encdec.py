@@ -1,0 +1,251 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/audio frontend is a stub (DESIGN.md §4): the encoder consumes
+precomputed frame embeddings [B, S_frames, D] via ``input_specs``. The
+decoder is a standard causal LM with cross-attention into the encoder
+output; at serving time the cross K/V (length = seq_len — the dominant
+state for the decode_32k cell) are computed once at prefill and cached.
+RoPE stands in for Whisper's learned absolute positions (noted in config).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import init_params, shape_params, stack_specs
+from .layers import (embed, embedding_spec, lm_head_spec, mlp, mlp_spec,
+                     rmsnorm, rmsnorm_spec, unembed)
+from repro.sharding.act import constrain_batch
+
+PyTree = Any
+
+
+def _enc_block_spec(cfg, dtype):
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "attn": attn.attention_spec(cfg, dtype),
+        "ln2": rmsnorm_spec(cfg.d_model),
+        "ffn": mlp_spec(cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def _dec_block_spec(cfg, dtype):
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "self_attn": attn.attention_spec(cfg, dtype),
+        "ln_x": rmsnorm_spec(cfg.d_model),
+        "cross_attn": attn.attention_spec(cfg, dtype),
+        "ln2": rmsnorm_spec(cfg.d_model),
+        "ffn": mlp_spec(cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ----------------------------------------------------------- param spec
+    def spec_tree(self) -> PyTree:
+        cfg = self.cfg
+        dtype = cfg.dtype
+        tree = {
+            "encoder": {
+                "periods": stack_specs(_enc_block_spec(cfg, dtype),
+                                       cfg.encoder_layers),
+                "final_norm": rmsnorm_spec(cfg.d_model),
+            },
+            "decoder": {
+                "periods": stack_specs(_dec_block_spec(cfg, dtype),
+                                       cfg.num_layers),
+                "final_norm": rmsnorm_spec(cfg.d_model),
+            },
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            tree["lm_head"] = lm_head_spec(cfg.d_model, cfg.vocab_size, dtype)
+        return tree
+
+    def init(self, key) -> PyTree:
+        return init_params(self.spec_tree(), key)
+
+    def shape_params(self) -> PyTree:
+        return shape_params(self.spec_tree())
+
+    # -------------------------------------------------------------- encoder
+    def encode(self, params, embeds) -> jax.Array:
+        cfg = self.cfg
+        x = constrain_batch(embeds.astype(cfg.dtype))
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+        def body(x, p):
+            h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            q, k, v = attn.qkv_project(p["attn"], cfg, h, positions)
+            y = attn.full_attention(p["attn"], cfg, q, k, v, causal=False,
+                                    window=None)
+            x = x + attn.attention_out(p["attn"], y, cfg.num_heads)
+            h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            return x + mlp(p["ffn"], h, cfg.activation), 0
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["periods"])
+        return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+    # -------------------------------------------------------------- decoder
+    def _cross_kv(self, p_block, enc_out):
+        """Cross-attention K/V from encoder output (no rope on cross)."""
+        cfg = self.cfg
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p_block["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p_block["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            k = k + p_block["cross_attn"]["bk"]
+            v = v + p_block["cross_attn"]["bv"]
+        return k, v
+
+    def _dec_block(self, p, x, enc_out, positions, *, cross_kv=None,
+                   self_cache=None, cache_len=None):
+        cfg = self.cfg
+        # self attention
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_project(p["self_attn"], cfg, h, positions)
+        new_cache = None
+        if self_cache is None:
+            y = attn.full_attention(p["self_attn"], cfg, q, k, v,
+                                    causal=True, window=None)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                self_cache["k"], k.astype(self_cache["k"].dtype),
+                cache_len, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                self_cache["v"], v.astype(self_cache["v"].dtype),
+                cache_len, axis=1)
+            y = attn.cached_decode_attention(
+                p["self_attn"], cfg, q, kc, vc, cache_len + 1, window=None)
+            new_cache = {"k": kc, "v": vc}
+        x = x + attn.attention_out(p["self_attn"], y, cfg.num_heads)
+
+        # cross attention
+        h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            qx = qx + p["cross_attn"]["bq"]
+        if cross_kv is None:
+            kx, vx = self._cross_kv(p, enc_out)
+        else:
+            kx, vx = cross_kv
+        if qx.shape[1] == 1:
+            ln = jnp.asarray(kx.shape[1], jnp.int32)
+            y = attn.cached_decode_attention(
+                p["cross_attn"], cfg, qx, kx, vx, ln, window=None)
+        else:
+            y = attn.full_attention(p["cross_attn"], cfg, qx, kx, vx,
+                                    causal=False, window=None)
+        x = x + attn.attention_out(p["cross_attn"], y, cfg.num_heads)
+
+        # ffn
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + mlp(p["ffn"], h, cfg.activation), new_cache
+
+    # ---------------------------------------------------------------- train
+    def loss_fn(self, params, batch) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["embeds"])
+        tokens = batch["tokens"]                       # [B, Ld]
+        b, ld = tokens.shape
+        x = constrain_batch(embed(params["embed"], tokens).astype(cfg.dtype))
+        positions = jnp.broadcast_to(jnp.arange(ld)[None, :], (b, ld))
+
+        def body(x, p):
+            x, _ = self._dec_block(p, x, enc_out, positions)
+            return x, 0
+
+        x, _ = jax.lax.scan(body, x, params["decoder"]["periods"])
+        x = rmsnorm(params["decoder"]["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params.get("embed"), params.get("lm_head"), x,
+                         tie=cfg.tie_embeddings)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        loss = -jnp.mean(ll)
+        return loss, {"loss": loss, "tokens": jnp.asarray(ll.size)}
+
+    # -------------------------------------------------------------- serving
+    def prefill(self, params, batch, *, max_dec_len: Optional[int] = None
+                ) -> Tuple[jax.Array, PyTree]:
+        """Encode audio; build cross-K/V cache + empty self cache."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["embeds"])
+        b = enc_out.shape[0]
+        ml = max_dec_len or cfg.decoder_len
+
+        def per_layer(p):
+            kx, vx = self._cross_kv(p, enc_out)
+            return {"cross_k": kx, "cross_v": vx}
+
+        cross = jax.vmap(
+            per_layer, in_axes=(0,))(params["decoder"]["periods"]) \
+            if False else jax.lax.map(per_layer, params["decoder"]["periods"])
+
+        kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        self_cache = {
+            "k": jnp.zeros((cfg.num_layers, b, ml, kvh, hd), cfg.dtype),
+            "v": jnp.zeros((cfg.num_layers, b, ml, kvh, hd), cfg.dtype),
+        }
+        cache = {"cross": cross, "self": self_cache,
+                 "len": jnp.asarray(0, jnp.int32)}
+        bos = jnp.zeros((b,), jnp.int32)
+        logits, cache = self.decode_step(params, cache, bos)
+        return logits, cache
+
+    def init_cache(self, batch_size: int, enc_len: int,
+                   for_shapes: bool = False) -> PyTree:
+        """Decode cache stand-in for serve_step lowering (decode_32k cell)."""
+        cfg = self.cfg
+        kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        ml = cfg.decoder_len
+        mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if for_shapes else \
+             (lambda s, d: jnp.zeros(s, d))
+        cache = {
+            "cross": {
+                "cross_k": mk((cfg.num_layers, batch_size, enc_len, kvh, hd), cfg.dtype),
+                "cross_v": mk((cfg.num_layers, batch_size, enc_len, kvh, hd), cfg.dtype),
+            },
+            "self": {
+                "k": mk((cfg.num_layers, batch_size, ml, kvh, hd), cfg.dtype),
+                "v": mk((cfg.num_layers, batch_size, ml, kvh, hd), cfg.dtype),
+            },
+            "len": (jax.ShapeDtypeStruct((), jnp.int32) if for_shapes
+                    else jnp.asarray(0, jnp.int32)),
+        }
+        return cache
+
+    def decode_step(self, params, cache, token) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        cache_len = cache["len"]
+        x = constrain_batch(embed(params["embed"], token[:, None]).astype(cfg.dtype))
+        positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+
+        def body(x, scanned):
+            p, cross_k, cross_v, sk, sv = scanned
+            x, nc = self._dec_block(
+                p, x, None, positions,
+                cross_kv=(cross_k, cross_v),
+                self_cache={"k": sk, "v": sv}, cache_len=cache_len)
+            return x, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x,
+            (params["decoder"]["periods"],
+             cache["cross"]["cross_k"], cache["cross"]["cross_v"],
+             cache["self"]["k"], cache["self"]["v"]))
+
+        x = rmsnorm(params["decoder"]["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params.get("embed"), params.get("lm_head"), x,
+                         tie=cfg.tie_embeddings)[:, 0]
+        new_cache = {"cross": cache["cross"],
+                     "self": {"k": nk, "v": nv},
+                     "len": cache_len + 1}
+        return logits, new_cache

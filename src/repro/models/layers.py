@@ -1,0 +1,98 @@
+"""Norms, RoPE, embeddings, dense FFNs — shared across architectures."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import activation, spec
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm_spec(d: int):
+    return {"scale": spec((d,), ("embed",), dtype=jnp.float32, init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def head_rmsnorm_spec(hd: int, axis: str = "head_dim"):
+    return {"scale": spec((hd,), (axis,), dtype=jnp.float32, init="ones")}
+
+
+def head_rmsnorm(p, x, eps: float = 1e-6):
+    """RMSNorm over the trailing head_dim (qwen3/gemma3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x, positions, theta: float):
+    """Apply rotary embeddings. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.arange(half, dtype=jnp.float32) / half
+    inv = theta ** -freq                              # [half]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+def embedding_spec(vocab: int, d: int, dtype):
+    return {"tokens": spec((vocab, d), ("vocab", "embed"), dtype=dtype)}
+
+
+def embed(p, token_ids):
+    return jnp.take(p["tokens"], token_ids, axis=0)
+
+
+def unembed(p_embed, p_head, x, *, tie: bool):
+    """Project to vocab logits (tied or separate head). fp32 logits."""
+    xf = x.astype(jnp.float32)
+    if tie:
+        w = p_embed["tokens"].astype(jnp.float32)
+        return jnp.einsum("bsd,vd->bsv", xf, w)
+    w = p_head["kernel"].astype(jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", xf, w)
+
+
+def lm_head_spec(d: int, vocab: int, dtype):
+    return {"kernel": spec((d, vocab), ("embed", "vocab"), dtype=dtype)}
+
+
+# --------------------------------------------------------------------- ffn
+GATED_ACTS = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}
+
+
+def mlp_spec(d: int, f: int, act: str, dtype):
+    if act in GATED_ACTS:
+        return {
+            "gate": spec((d, f), ("embed", "mlp"), dtype=dtype),
+            "up": spec((d, f), ("embed", "mlp"), dtype=dtype),
+            "down": spec((f, d), ("mlp", "embed"), dtype=dtype),
+        }
+    return {
+        "in": spec((d, f), ("embed", "mlp"), dtype=dtype),
+        "out": spec((f, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def mlp(p, x, act: str):
+    if act in GATED_ACTS:
+        g = jnp.einsum("bsd,df->bsf", x, p["gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["up"])
+        return jnp.einsum("bsf,fd->bsd", GATED_ACTS[act](g) * u, p["down"])
+    h = activation(act)(jnp.einsum("bsd,df->bsf", x, p["in"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["out"])

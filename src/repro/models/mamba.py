@@ -1,0 +1,202 @@
+"""Mamba-1 (selective SSM) block: chunked training scan + O(1) decode.
+
+The selective scan h_t = dA_t * h_{t-1} + dB_t x_t expands the state to
+[*, d_inner, N] per token; materializing it over a full sequence is
+intractable in pure JAX, so training/prefill run an outer ``lax.scan`` over
+time *chunks* (carrying h [B, DI, N]) with an associative scan inside each
+chunk — O(S/Lc) HLO size, O(B * Lc * DI * N) peak memory, and the d_inner
+axis is sharded over the tensor-parallel axis by the sharding rules
+(in_proj column-parallel, out_proj row-parallel — the Megatron pattern
+applied to an SSM).
+
+Decode is the recurrence itself: one step, no scan. The layer state is
+(conv_tail [B, cw-1, DI], h [B, DI, N]).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    n = cfg.ssm.state_dim
+    cw = cfg.ssm.conv_width
+    dtr = cfg.ssm.dt_rank or max(1, math.ceil(d / 16))
+    return d, di, n, cw, dtr
+
+
+def mamba_spec(cfg, dtype):
+    d, di, n, cw, dtr = _dims(cfg)
+    return {
+        "in_proj": spec((d, 2 * di), ("embed", "mlp"), dtype=dtype),
+        "conv_w": spec((cw, di), ("conv", "mlp"), dtype=dtype),
+        "conv_b": spec((di,), ("mlp",), dtype=dtype, init="zeros"),
+        "x_proj": spec((di, dtr + 2 * n), ("mlp", "dt"), dtype=dtype),
+        "dt_proj": spec((dtr, di), ("dt", "mlp"), dtype=dtype),
+        "dt_bias": spec((di,), ("mlp",), dtype=jnp.float32, init="zeros"),
+        "A_log": spec((di, n), ("mlp", "state"), dtype=jnp.float32,
+                      init="ones"),
+        "D": spec((di,), ("mlp",), dtype=jnp.float32, init="ones"),
+        "out_proj": spec((di, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _ssm_inputs(p, x, cfg):
+    """Shared projections. x [B,S,D] -> x1, z, dt, Bs, Cs."""
+    _, di, n, _, dtr = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)                    # [B,S,DI]
+    return x1, z, di, n, dtr
+
+
+def _post_conv(p, x1c, cfg):
+    _, di, n, _, dtr = _dims(cfg)
+    x1c = jax.nn.silu(x1c)
+    bcdt = jnp.einsum("bse,ef->bsf", x1c, p["x_proj"])   # [B,S,dtr+2N]
+    dt_low = bcdt[..., :dtr]
+    bs = bcdt[..., dtr:dtr + n].astype(jnp.float32)      # [B,S,N]
+    cs = bcdt[..., dtr + n:].astype(jnp.float32)         # [B,S,N]
+    dt = jnp.einsum("bsr,re->bse", dt_low, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])              # [B,S,DI]
+    return x1c, dt, bs, cs
+
+
+def _causal_conv(p, x1, cfg, tail=None):
+    """Depthwise causal conv. x1 [B,S,DI]; tail [B,cw-1,DI] for decode."""
+    _, _, _, cw, _ = _dims(cfg)
+    if tail is None:
+        pad = jnp.zeros_like(x1[:, : cw - 1])
+    else:
+        pad = tail.astype(x1.dtype)
+    xp = jnp.concatenate([pad, x1], axis=1)              # [B,S+cw-1,DI]
+    out = sum(
+        xp[:, i: i + x1.shape[1]] * p["conv_w"][i]
+        for i in range(cw)
+    )
+    return out + p["conv_b"]
+
+
+def _chunk_scan_associative(dA, dBx, h0):
+    """Associative scan within a chunk, carrying h0 in.
+
+    dA, dBx: [B, L, DI, N] fp32. Returns (h_all [B,L,DI,N], h_last).
+    O(log L) depth but materializes O(log L) copies of the [B,L,DI,N]
+    expansion — HBM-traffic-bound (the §Perf falcon-mamba baseline).
+    """
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    aA, aB = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = aA * h0[:, None] + aB
+    return h_all, h_all[:, -1]
+
+
+def _chunk_scan_sequential(dtc, bsc, csc, xc, A, h0):
+    """Sequential time scan within a chunk: the [DI, N] expansion exists
+    only as the loop carry (VMEM-resident on TPU), and dA/dBx are computed
+    on the fly per step — O(L) depth, O(B*DI*N) live state, ~an order of
+    magnitude less HBM traffic than the associative form (the §Perf
+    falcon-mamba optimization). Returns (y_chunk [B,L,DI], h_last)."""
+    def step(h, tc):
+        dt_t, bs_t, cs_t, x_t = tc                       # [B,DI],[B,N],[B,N],[B,DI]
+        dA = jnp.exp(dt_t[..., None] * A)                # [B,DI,N]
+        dBx = (dt_t * x_t)[..., None] * bs_t[:, None, :]  # [B,DI,N]
+        h = dA * h + dBx
+        y_t = jnp.einsum("ben,bn->be", h, cs_t)          # [B,DI]
+        return h, y_t
+
+    xs = (dtc.swapaxes(0, 1), bsc.swapaxes(0, 1),
+          csc.swapaxes(0, 1), xc.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h_last
+
+
+# Global default for the within-chunk scan; §Perf measurements flip this
+# to re-lower the associative baseline (see EXPERIMENTS.md).
+DEFAULT_INNER = "sequential"
+
+
+def mamba_forward(p, x, cfg, *, chunk: int = 128,
+                  inner: Optional[str] = None):
+    """Train/prefill pass. x [B,S,D] -> (y [B,S,D], final_state).
+
+    ``inner`` selects the within-chunk scan: 'sequential' (default;
+    traffic-optimal) or 'associative' (log-depth; the paper-faithful-
+    baseline measured in EXPERIMENTS.md §Perf)."""
+    inner = inner or os.environ.get("REPRO_MAMBA_INNER", DEFAULT_INNER)
+    b, s, d = x.shape
+    _, di, n, cw, _ = _dims(cfg)
+    lc = min(chunk, s)
+    while s % lc:
+        lc -= 1
+    nc = s // lc
+
+    x1, z, *_ = _ssm_inputs(p, x, cfg)
+    x1c = _causal_conv(p, x1, cfg)
+    x1c, dt, bs, cs = _post_conv(p, x1c, cfg)
+    A = -jnp.exp(p["A_log"])                             # [DI,N]
+
+    x1f = x1c.astype(jnp.float32)
+
+    def step(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * lc, lc, axis=1)
+        dtc, bsc, csc, xc = sl(dt), sl(bs), sl(cs), sl(x1f)
+        if inner == "associative":
+            dA = jnp.exp(dtc[..., None] * A)                 # [B,L,DI,N]
+            dBx = (dtc * xc)[..., None] * bsc[:, :, None, :]  # [B,L,DI,N]
+            h_all, h_last = _chunk_scan_associative(dA, dBx, h)
+            yc = jnp.einsum("blen,bln->ble", h_all, csc)     # [B,L,DI]
+        else:
+            yc, h_last = _chunk_scan_sequential(dtc, bsc, csc, xc, A, h)
+        return h_last, yc
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(nc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)       # [B,S,DI]
+    y = y + p["D"] * x1f
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+    conv_tail = x1[:, s - (cw - 1):] if s >= cw - 1 else jnp.pad(
+        x1, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+    return out, (conv_tail, h_last)
+
+
+def mamba_decode_step(p, x, state, cfg):
+    """One-token step. x [B,1,D]; state (conv_tail [B,cw-1,DI], h [B,DI,N])."""
+    conv_tail, h = state
+    b = x.shape[0]
+    _, di, n, cw, _ = _dims(cfg)
+
+    x1, z, *_ = _ssm_inputs(p, x, cfg)                   # [B,1,DI]
+    x1c = _causal_conv(p, x1, cfg, tail=conv_tail)       # [B,1,DI]
+    x1c, dt, bs, cs = _post_conv(p, x1c, cfg)
+    A = -jnp.exp(p["A_log"])
+
+    dA = jnp.exp(dt[:, 0, :, None] * A)                  # [B,DI,N]
+    dBx = (dt[:, 0] * x1c[:, 0].astype(jnp.float32))[..., None] \
+        * bs[:, 0, None, :]                              # [B,DI,N]
+    h_new = dA * h + dBx
+    y = jnp.einsum("ben,bn->be", h_new, cs[:, 0])        # [B,DI]
+    y = y + p["D"] * x1c[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+    new_tail = jnp.concatenate([conv_tail[:, 1:], x1], axis=1)
+    return out, (new_tail, h_new)
+
+
+def mamba_state_shape(cfg, batch: int):
+    _, di, n, cw, _ = _dims(cfg)
+    return ((batch, cw - 1, di), (batch, di, n))

@@ -1,0 +1,90 @@
+"""Model construction + per-(arch, shape) input specs.
+
+``build_model`` returns the right model class for a family; ``batch_specs``
+/ ``cache_specs`` produce ShapeDtypeStruct stand-ins for every model input
+— the dry-run's only view of the data (no allocation ever happens).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+from .encdec import EncDecLM
+from .lm import LM
+
+PyTree = Any
+Model = Union[LM, EncDecLM]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for train (mode='train') / prefill (mode='prefill')."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        specs = {"embeds": _sds((b, s, cfg.d_model), cfg.dtype)}
+        if shape.mode == "train":
+            specs["tokens"] = _sds((b, cfg.decoder_len), jnp.int32)
+            specs["labels"] = _sds((b, cfg.decoder_len), jnp.int32)
+        return specs
+    if cfg.frontend is not None:
+        specs = {"embeds": _sds((b, s, cfg.d_model), cfg.dtype)}
+        if shape.mode == "train":
+            specs["labels"] = _sds((b, s), jnp.int32)
+        return specs
+    specs = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.mode == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def decode_token_spec(cfg: ArchConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    if cfg.frontend is not None and not cfg.is_encdec:
+        return _sds((b, cfg.d_model), cfg.dtype)   # vlm: next embed stub
+    return _sds((b,), jnp.int32)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, model: Model) -> PyTree:
+    """ShapeDtypeStruct decode cache for the decode_* cells."""
+    if cfg.is_encdec:
+        return model.init_cache(shape.global_batch, shape.seq_len,
+                                for_shapes=True)
+    return model.init_cache(shape.global_batch, shape.seq_len,
+                            for_shapes=True)
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key,
+               batch_override: int = 0) -> Dict[str, jax.Array]:
+    """Materialize a random batch matching batch_specs (smoke/examples)."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.is_encdec:
+        out = {"embeds": jax.random.normal(k1, (b, s, cfg.d_model), jnp.float32).astype(cfg.dtype)}
+        if shape.mode == "train":
+            out["tokens"] = jax.random.randint(k2, (b, cfg.decoder_len), 0, cfg.vocab_size)
+            out["labels"] = jax.random.randint(k3, (b, cfg.decoder_len), 0, cfg.vocab_size)
+        return out
+    if cfg.frontend is not None:
+        out = {"embeds": jax.random.normal(k1, (b, s, cfg.d_model), jnp.float32).astype(cfg.dtype)}
+        if shape.mode == "train":
+            out["labels"] = jax.random.randint(k3, (b, s), 0, cfg.vocab_size)
+        return out
+    out = {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size)}
+    if shape.mode == "train":
+        out["labels"] = jax.random.randint(k3, (b, s), 0, cfg.vocab_size)
+    return out

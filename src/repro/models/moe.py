@@ -1,0 +1,227 @@
+"""GShard-style capacity-based top-k Mixture of Experts.
+
+Dispatch/combine are expressed as einsums over a [B, S, E, C] routing
+tensor so expert parallelism (experts sharded over the 'model' axis)
+produces honest all-to-all / all-gather collectives in the compiled HLO —
+what the roofline's collective term reads. Capacity per (batch-row, expert)
+is C = ceil(S * k * cf / E); overflowing tokens are dropped (standard
+GShard semantics) and reported via the aux metrics.
+
+Routing math is fp32 regardless of activation dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.act import constrain_expert_model
+
+from .common import spec
+
+
+def moe_spec(cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.num_experts
+    p = {
+        "router": spec((d, e), ("embed", "expert"), dtype=jnp.float32),
+        "down": spec((e, f, d), ("expert", "mlp", "embed"), dtype=dtype),
+    }
+    if cfg.activation == "swiglu":
+        p["gate"] = spec((e, d, f), ("expert", "embed", "mlp"), dtype=dtype)
+        p["up"] = spec((e, d, f), ("expert", "embed", "mlp"), dtype=dtype)
+    else:
+        p["in"] = spec((e, d, f), ("expert", "embed", "mlp"), dtype=dtype)
+    return p
+
+
+def capacity(seq: int, num_experts: int, top_k: int, cf: float) -> int:
+    return max(1, math.ceil(seq * top_k * cf / num_experts))
+
+
+def route(x, router, num_experts: int, top_k: int, cap: int):
+    """Compute dispatch/combine tensors.
+
+    Returns (dispatch [B,S,E,C] bool-ish, combine [B,S,E,C] f32, aux dict).
+    """
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)                    # [B,S,E]
+    gates, idx = jax.lax.top_k(probs, top_k)                   # [B,S,k]
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)          # renormalize
+
+    onehot = jax.nn.one_hot(idx, num_experts, dtype=jnp.float32)  # [B,S,k,E]
+
+    # Position of each (token, slot) within its expert's capacity buffer:
+    # slot-major then sequence-major priority, matching GShard.
+    pos = jnp.zeros_like(onehot)
+    counts = jnp.zeros(onehot.shape[:1] + onehot.shape[3:], jnp.float32)  # [B,E]
+    pos_slots = []
+    for slot in range(onehot.shape[2]):
+        oh = onehot[:, :, slot]                                # [B,S,E]
+        within = jnp.cumsum(oh, axis=1) - oh                   # [B,S,E]
+        pos_slots.append(within + counts[:, None, :])
+        counts = counts + jnp.sum(oh, axis=1)
+    pos = jnp.stack(pos_slots, axis=2)                         # [B,S,k,E]
+
+    keep = onehot * (pos < cap)                                # [B,S,k,E]
+    # A token reaches each expert through at most one slot -> reduce over k.
+    routed = jnp.sum(keep, axis=2)                             # [B,S,E]
+    pos_e = jnp.sum(pos * keep, axis=2)                        # [B,S,E]
+    gate_e = jnp.sum(gates[..., None] * keep, axis=2)          # [B,S,E]
+
+    pos_oh = jax.nn.one_hot(pos_e.astype(jnp.int32), cap,
+                            dtype=jnp.float32)                 # [B,S,E,C]
+    dispatch = routed[..., None] * pos_oh
+    combine = gate_e[..., None] * dispatch
+
+    # Aux: load-balancing loss (Switch/GShard) + drop fraction.
+    me = jnp.mean(probs, axis=(0, 1))                          # [E]
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))        # [E]
+    aux_loss = num_experts * jnp.sum(me * ce) / max(1, onehot.shape[2])
+    dropped = 1.0 - jnp.sum(keep) / jnp.maximum(jnp.sum(onehot), 1.0)
+    return dispatch, combine, {"moe_aux_loss": aux_loss,
+                               "moe_drop_frac": dropped}
+
+
+def route_indices(x, router, num_experts: int, top_k: int, cap: int):
+    """Index-form routing for the gather dispatch (§Perf iteration 5).
+
+    Returns:
+      token_for_slot [B,E,C] int32 — source token per expert slot (S = empty)
+      slot_for_token [B,S,k] int32 — destination slot per (token, choice)
+                                      (C = dropped)
+      expert_for_token [B,S,k], gates [B,S,k] f32, aux dict
+    """
+    b, s, _ = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)                   # [B,S,k]
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, num_experts, dtype=jnp.float32)
+    counts = jnp.zeros((b, num_experts), jnp.float32)
+    pos_slots = []
+    for slot in range(top_k):
+        oh = onehot[:, :, slot]
+        within = jnp.cumsum(oh, axis=1) - oh
+        pos_slots.append(jnp.sum((within + counts[:, None, :]) * oh, axis=-1))
+        counts = counts + jnp.sum(oh, axis=1)
+    pos_k = jnp.stack(pos_slots, axis=2)                       # [B,S,k]
+
+    kept = pos_k < cap
+    slot_for_token = jnp.where(kept, pos_k, cap).astype(jnp.int32)
+
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None, None], idx.shape)
+    sidx = jnp.broadcast_to(jnp.arange(s)[None, :, None], idx.shape)
+    token_for_slot = jnp.full((b, num_experts, cap + 1), s, jnp.int32)
+    token_for_slot = token_for_slot.at[
+        bidx, idx, slot_for_token].set(sidx, mode="drop")[..., :cap]
+
+    # Per-slot gate: scatter the (token, choice) gate to its expert slot.
+    gate_for_slot = jnp.zeros((b, num_experts, cap + 1), jnp.float32)
+    gate_for_slot = gate_for_slot.at[
+        bidx, idx, slot_for_token].set(gates, mode="drop")[..., :cap]
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    aux_loss = num_experts * jnp.sum(me * ce) / max(1, top_k)
+    dropped = 1.0 - jnp.sum(kept) / kept.size
+    return (token_for_slot, gate_for_slot, slot_for_token, idx,
+            gates * kept.astype(jnp.float32),
+            {"moe_aux_loss": aux_loss, "moe_drop_frac": dropped})
+
+
+def _expert_ffn(p, xin, cfg):
+    """[E,B,C,D] -> [E,B,C,D] through the per-expert FFN."""
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("ebcd,edf->ebcf", xin, p["gate"])
+        u = jnp.einsum("ebcd,edf->ebcf", xin, p["up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ebcd,edf->ebcf", xin, p["in"]))
+    return jnp.einsum("ebcf,efd->ebcd", h, p["down"])
+
+
+def moe_ffn_einsum(p, x, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-hot-einsum (GShard-literal) dispatch — the §Perf-5 baseline.
+
+    Dispatch/combine are O(B*S*E*C*D) einsums: simple and fully SPMD, but
+    at top-k=8/E=64 they cost ~10x the expert FFN itself.
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    cap = capacity(s, mo.num_experts, mo.top_k, mo.capacity_factor)
+    dispatch, combine, aux = route(
+        x, p["router"], mo.num_experts, mo.top_k, cap)
+
+    dis = dispatch.astype(x.dtype)
+    # Pin the dispatched activations to the expert-parallel axis so the
+    # dispatch lowers to an activation all-to-all rather than a per-layer
+    # expert-weight all-gather (sharding/act.py; §Perf hillclimb 2).
+    xin = constrain_expert_model(
+        jnp.einsum("bsec,bsd->ebcd", dis, x))                  # [E,B,C,D]
+    out = constrain_expert_model(_expert_ffn(p, xin, cfg))
+    y = jnp.einsum("ebcd,bsec->bsd", out, combine.astype(x.dtype))
+    return y.astype(x.dtype), aux
+
+
+def moe_ffn_gather(p, x, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Gather/scatter dispatch (§Perf iteration 5): move tokens by index
+    instead of one-hot matmuls — zero dispatch FLOPs. The combine is a
+    *scatter-add back to token space per expert shard* (each shard adds
+    only its local experts' slots, then XLA psums [B,S,D] — the same
+    collective as the einsum combine, without its O(B*S*E*C*D) FLOPs; a
+    gather-style combine was tried first and rejected: it all-gathers the
+    E-sharded expert outputs, 3-4x the collective bytes). Bit-equivalent
+    routing to moe_ffn_einsum (tested)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    cap = capacity(s, mo.num_experts, mo.top_k, mo.capacity_factor)
+    token_for_slot, gate_for_slot, _, _, _, aux = route_indices(
+        x, p["router"], mo.num_experts, mo.top_k, cap)
+
+    # dispatch: gather tokens into expert slots (empty slots hit the
+    # zero-pad row s)
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((b, 1, d), x.dtype)], axis=1)            # [B,S+1,D]
+    xin = jnp.take_along_axis(
+        x_pad[:, :, None, :],                                  # [B,S+1,1,D]
+        token_for_slot.transpose(0, 2, 1)[:, :, :, None],      # [B,C,E,1]
+        axis=1)                                                # [B,C,E,D]
+    xin = constrain_expert_model(xin.transpose(2, 0, 1, 3))    # [E,B,C,D]
+
+    out = constrain_expert_model(_expert_ffn(p, xin, cfg))     # [E,B,C,D]
+
+    # combine: weighted scatter-add of each expert slot back to its token
+    # row (row s collects empty slots and is dropped).
+    weighted = out * gate_for_slot.transpose(1, 0, 2)[..., None].astype(out.dtype)
+    bidx = jnp.broadcast_to(jnp.arange(b)[None, :, None],
+                            token_for_slot.transpose(1, 0, 2).shape)
+    tfs = token_for_slot.transpose(1, 0, 2)                    # [E,B,C]
+    y = jnp.zeros((b, s + 1, d), out.dtype).at[
+        bidx, tfs].add(weighted)[:, :s]
+    return y.astype(x.dtype), aux
+
+
+def moe_ffn(p, x, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x [B,S,D] -> [B,S,D] through top-k experts.
+
+    Default is the einsum (GShard-literal) dispatch: §Perf iteration 5
+    measured the index/gather dispatch at 10x fewer dot FLOPs (useful
+    0.05 -> 0.47 on olmoe) but found that under pjit auto-sharding *both*
+    index-form combines explode the collective term (gather-combine
+    all-gathers the E-sharded expert outputs; scatter-add combine is
+    mispartitioned by SPMD) — net refuted. The index path stays selectable
+    (REPRO_MOE_GATHER_DISPATCH=1) and equivalence-tested; making it win
+    requires manual collectives (shard_map all-to-all dispatch), recorded
+    as the next step in EXPERIMENTS.md.
+    """
+    import os
+    if os.environ.get("REPRO_MOE_GATHER_DISPATCH"):
+        return moe_ffn_gather(p, x, cfg)
+    return moe_ffn_einsum(p, x, cfg)

@@ -1,0 +1,2 @@
+# Serving substrate: prefill/decode engine + semaphore-based continuous
+# batching admission (the paper's Algorithm-5 discipline).

@@ -1,0 +1,60 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jnp.ndarray          # [B, n_generated]
+    logprobs: Optional[jnp.ndarray] = None
+
+
+class ServeEngine:
+    """Wraps a model with jitted prefill/decode and a sampling loop."""
+
+    def __init__(self, model, params, *, max_len: int = 256,
+                 temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._decode = jax.jit(model.decode_step)
+
+    def prefill(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, PyTree]:
+        if self.model.cfg.is_encdec:
+            return self.model.prefill(self.params, batch)
+        return self.model.prefill(self.params, batch, max_len=self.max_len)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, jax.Array], n_tokens: int,
+                 key=None, eos_id: Optional[int] = None) -> GenerationResult:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, cache = self.prefill(batch)
+        outs = []
+        tok = self._sample(logits, key)
+        outs.append(tok)
+        done = jnp.zeros_like(tok, dtype=bool)
+        for i in range(n_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = self._sample(logits, sub)
+            if eos_id is not None:
+                done = done | (tok == eos_id)
+                tok = jnp.where(done, eos_id, tok)
+            outs.append(tok)
+            if eos_id is not None and bool(jnp.all(done)):
+                break
+        return GenerationResult(tokens=jnp.stack(outs, axis=1))

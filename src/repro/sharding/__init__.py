@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules,
+    batch_shardings,
+    cache_shardings,
+    params_pspecs,
+    params_shardings,
+    pspec_for,
+)

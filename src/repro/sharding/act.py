@@ -1,0 +1,114 @@
+"""Activation sharding constraints (context-scoped).
+
+Sharding propagation alone does not reliably pin the batch dimension of
+activations to the data axes — e.g. a gather from a vocab-sharded
+embedding table can leave the result replicated, after which *every*
+device redundantly computes the full batch (a 16x compute bug the roofline
+catches immediately). Models therefore call ``constrain_batch`` at the
+embedding boundary; the driver scopes the policy with
+``activation_sharding(...)`` while lowering, and single-device tests run
+with the policy unset (no-op).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes: Sequence[str],
+                        seq_axes: Sequence[str] = ()):
+    """Scope the activation policy: batch dim -> batch_axes (and optionally
+    the sequence dim -> seq_axes, for context-parallel runs)."""
+    token = _POLICY.set((mesh, tuple(batch_axes), tuple(seq_axes)))
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def _spec_entry(axes: Tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim0 (batch) of an activation to the configured data axes."""
+    policy = _POLICY.get()
+    if policy is None:
+        return x
+    mesh, batch_axes, seq_axes = policy
+    if not batch_axes or x.shape[0] % _size(mesh, batch_axes) != 0:
+        return x
+    entries = [_spec_entry(batch_axes)] + [None] * (x.ndim - 1)
+    if seq_axes and x.ndim >= 2 and x.shape[1] % _size(mesh, seq_axes) == 0:
+        entries[1] = _spec_entry(seq_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def _size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return max(n, 1)
+
+
+def current_tp() -> int:
+    """Tensor-parallel degree of the active policy's mesh (1 when unset) —
+    attention head planning keys off this."""
+    policy = _POLICY.get()
+    if policy is None:
+        return 1
+    mesh, _, _ = policy
+    return int(mesh.shape.get("model", 1))
+
+
+def constrain_expert_model(x: jax.Array) -> jax.Array:
+    """Pin dim0 (experts) of the MoE dispatch tensors [E,B,C,D] to the
+    'model' axis. Without this, XLA may choose to all-gather the expert
+    *weights* per layer instead of all-to-all'ing the (much smaller)
+    dispatched activations — an ~1 GB/layer collective on olmoe decode
+    (§Perf hillclimb 2)."""
+    policy = _POLICY.get()
+    if policy is None or os.environ.get("REPRO_MOE_NO_EP_CONSTRAINT"):
+        return x
+    mesh, batch_axes, _ = policy
+    tp = mesh.shape.get("model", 1)
+    if tp <= 1 or x.shape[0] % tp != 0:
+        return x
+    entries = [None] * x.ndim
+    entries[0] = "model"
+    if x.ndim >= 2 and batch_axes and x.shape[1] % _size(mesh, batch_axes) == 0:
+        entries[1] = _spec_entry(batch_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_seq_model(x: jax.Array) -> jax.Array:
+    """Pin dim1 (sequence) of an attention activation to the 'model' axis —
+    the 'seq' head plan's sharding (batch dim0 stays on the data axes)."""
+    policy = _POLICY.get()
+    if policy is None:
+        return x
+    mesh, batch_axes, _ = policy
+    if "model" not in mesh.axis_names or x.ndim < 2:
+        return x
+    if x.shape[1] % mesh.shape["model"] != 0:
+        return x
+    entries = [None] * x.ndim
+    if batch_axes and x.shape[0] % _size(mesh, batch_axes) == 0:
+        entries[0] = _spec_entry(batch_axes)
+    entries[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,189 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP / CP).
+
+Every parameter leaf carries logical axis names (models/common.ArraySpec);
+this module maps them onto the production mesh:
+
+  mesh axes:  ('pod', 'data', 'model')  multi-pod   /  ('data', 'model')
+
+  'batch'                -> ('pod', 'data')      data parallelism
+  'heads' 'mlp' 'vocab'  -> 'model'              tensor parallelism
+  'expert'               -> 'model'              expert parallelism
+  'embed'                -> ('pod','data') when FSDP (ZeRO-3), else replicated
+  'kv_heads'             -> 'model' when divisible, else replicated (GQA)
+  'seq'                  -> 'data' only for context-parallel decode (the
+                            long_500k cell: batch=1, KV cache sharded in time)
+  everything else        -> replicated
+
+Conflict resolution: a mesh axis may appear once per PartitionSpec; dims are
+resolved left-to-right with already-used axes skipped (e.g. MoE kernels
+('expert','embed','mlp') give expert->model, embed->data, mlp->replicated).
+Divisibility is checked per-leaf; non-divisible dims fall back to
+replication (recorded by ``explain``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArraySpec, is_spec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    fsdp: bool = False                  # shard 'embed' over the data axes
+    context_parallel: bool = False      # shard cache time axis over 'data'
+    # logical -> candidate mesh axes (first fit wins, in order)
+    table: Optional[Dict[str, Tuple[str, ...]]] = None
+
+    def resolved_table(self, mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        t = {
+            "batch": batch_axes,
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "mlp": ("model",),
+            "vocab": ("model",),
+            "expert": ("model",),
+            "embed": batch_axes if self.fsdp else (),
+            "seq": ("data",) if self.context_parallel else (),
+        }
+        if self.table:
+            t.update(self.table)
+        return t
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def pspec_for(logical: Tuple[Optional[str], ...],
+              shape: Tuple[int, ...],
+              rules: ShardingRules,
+              mesh: Mesh) -> P:
+    """PartitionSpec for one leaf, with divisibility + conflict checks."""
+    table = rules.resolved_table(mesh)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        cand = table.get(name, ()) if name else ()
+        cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+        if cand and dim % _axis_size(mesh, cand) == 0:
+            used.update(cand)
+            out.append(cand if len(cand) > 1 else cand[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def params_pspecs(spec_tree: PyTree, rules: ShardingRules, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: pspec_for(s.logical, s.shape, rules, mesh),
+        spec_tree, is_leaf=is_spec)
+
+
+def params_shardings(spec_tree: PyTree, rules: ShardingRules, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, pspec_for(s.logical, s.shape, rules, mesh)),
+        spec_tree, is_leaf=is_spec)
+
+
+# --------------------------------------------------------------- activations
+def batch_pspec(rules: ShardingRules, mesh: Mesh, ndim: int,
+                *, seq_axis: Optional[int] = None,
+                batch_size: Optional[int] = None) -> P:
+    """Spec for a batch-leading activation/input: batch over DP axes; the
+    sequence axis over 'data' under context parallelism."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    specs: list = [None] * ndim
+    if batch_size is None or batch_size % _axis_size(mesh, batch_axes) == 0:
+        specs[0] = batch_axes if len(batch_axes) > 1 else (
+            batch_axes[0] if batch_axes else None)
+    elif "data" in mesh.axis_names and batch_size % mesh.shape["data"] == 0:
+        specs[0] = "data"
+    if rules.context_parallel and seq_axis is not None and specs[0] is None:
+        specs[seq_axis] = "data"
+    return P(*specs)
+
+
+def batch_shardings(batch_tree: PyTree, rules: ShardingRules, mesh: Mesh,
+                    cfg=None) -> PyTree:
+    """Shardings for a train/prefill batch dict (tokens/embeds/labels)."""
+    def one(leaf):
+        b = leaf.shape[0]
+        seq_axis = 1 if leaf.ndim >= 2 else None
+        return NamedSharding(
+            mesh, batch_pspec(rules, mesh, leaf.ndim,
+                              seq_axis=seq_axis, batch_size=b))
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(cache_tree: PyTree, rules: ShardingRules, mesh: Mesh,
+                    cfg) -> PyTree:
+    """Shardings for a decode cache tree, resolved by leaf name.
+
+    KV leaves are [(NP,) B, T, KV, hd]: batch -> DP axes; time -> 'data'
+    under context parallelism (batch=1); kv heads -> 'model' if divisible.
+    Mamba leaves shard d_inner over 'model'. The 'len' scalar is replicated.
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model_sz = mesh.shape.get("model", 1)
+
+    def walk(tree):
+        out = {}
+        for name, v in tree.items():
+            if isinstance(v, dict):
+                out[name] = walk(v)
+                continue
+            shape = v.shape
+            if name in ("k", "v", "cross_k", "cross_v"):
+                nd = len(shape)
+                b_ax, t_ax, kv_ax, hd_ax = nd - 4, nd - 3, nd - 2, nd - 1
+                specs = [None] * nd
+                b, t, kvh, hd = (shape[b_ax], shape[t_ax],
+                                 shape[kv_ax], shape[hd_ax])
+                if b % max(_axis_size(mesh, batch_axes), 1) == 0 and batch_axes:
+                    specs[b_ax] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+                elif rules.context_parallel and "data" in mesh.axis_names \
+                        and t % mesh.shape["data"] == 0:
+                    specs[t_ax] = "data"
+                # TP on the cache: kv heads when divisible, else head_dim
+                # (GQA with kv < |model|; the contraction becomes a psum).
+                if kvh % model_sz == 0:
+                    specs[kv_ax] = "model"
+                elif hd % model_sz == 0:
+                    specs[hd_ax] = "model"
+                out[name] = NamedSharding(mesh, P(*specs))
+            elif name in ("conv", "h"):
+                nd = len(shape)
+                di_ax = nd - 2 if name == "h" else nd - 1
+                b_ax = nd - 3 if name == "h" else nd - 3
+                specs = [None] * nd
+                if shape[b_ax] % max(_axis_size(mesh, batch_axes), 1) == 0 and batch_axes:
+                    specs[b_ax] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+                if shape[di_ax] % model_sz == 0:
+                    specs[di_ax] = "model"
+                out[name] = NamedSharding(mesh, P(*specs))
+            elif name == "len":
+                out[name] = NamedSharding(mesh, P())
+            else:
+                out[name] = NamedSharding(mesh, P())
+        return out
+
+    return walk(cache_tree)
+
+
+def explain(spec_tree: PyTree, rules: ShardingRules, mesh: Mesh) -> Dict[str, str]:
+    """Human-readable leaf -> spec map (logged by the dry-run)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(spec_tree, is_leaf=is_spec)
+    out = {}
+    for path, s in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        out[key] = str(pspec_for(s.logical, s.shape, rules, mesh))
+    return out

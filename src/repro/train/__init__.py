@@ -1,0 +1,3 @@
+# Training substrate: optimizer, train-step builder (microbatching/remat),
+# async atomic checkpointing, data pipeline, gradient compression, elastic
+# mesh recovery.

@@ -1,0 +1,105 @@
+"""int8 error-feedback gradient compression for cross-pod reduction.
+
+At multi-pod scale the cross-pod links are the scarce resource (the
+roofline's collective term). This implements the standard 1-bit-Adam-style
+recipe, adapted to int8:
+
+  q(g)        — per-tensor symmetric int8 quantization (scale = max|g|/127)
+  feedback    — the quantization residual is carried in optimizer-adjacent
+                state and added back next step, so the *accumulated* error
+                stays bounded and convergence is preserved (tested);
+  transport   — inside shard_map: int8 all-to-all (each device receives its
+                shard's contributions), local fp32 reduction, int8
+                all-gather of the reduced shard. Bytes on the wire:
+                2N int8 vs 2N bf16 => 2x; vs fp32 => 4x.
+
+``compressed_psum_approx`` is the transport-free variant (quantize +
+exact psum) used where only the *quantization* error matters — e.g. on
+meshes whose axis sizes don't divide the tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, residual: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q, scale, new_residual). g and residual fp32."""
+    corrected = g + residual
+    q, scale = quantize_int8(corrected)
+    new_residual = corrected - dequantize_int8(q, scale)
+    return q, scale, new_residual
+
+
+def compressed_allreduce_int8(v: jax.Array, mesh: Mesh, axis: str = "data"
+                              ) -> jax.Array:
+    """Approximate sum(v) over ``axis`` with int8 transport.
+
+    v: a flat fp32 vector, length divisible by |axis|. Returns the summed
+    vector (same sharding as input). Runs inside shard_map.
+    """
+    n_shards = mesh.shape[axis]
+
+    def inner(x):  # x: local shard of v  [L]
+        l = x.shape[0]
+        assert l % n_shards == 0
+        q, scale = quantize_int8(x)
+        # Every peer gets the piece of my vector it is responsible for.
+        pieces = q.reshape(n_shards, l // n_shards)
+        recv = jax.lax.all_to_all(pieces, axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        scales = jax.lax.all_gather(scale, axis)           # [n_shards]
+        # recv: [n_shards, l/n_shards] — contribution from each peer.
+        summed = jnp.sum(recv.astype(jnp.float32)
+                         * scales[:, None], axis=0)        # [l/n_shards]
+        q2, scale2 = quantize_int8(summed)
+        gathered = jax.lax.all_gather(q2, axis)            # [n_shards, l/n]
+        scales2 = jax.lax.all_gather(scale2, axis)
+        return (gathered.astype(jnp.float32)
+                * scales2[:, None]).reshape(l)
+
+    return jax.shard_map(inner, mesh=mesh, in_specs=P(axis),
+                         out_specs=P(axis))(v)
+
+
+def compressed_psum_approx(g: jax.Array) -> jax.Array:
+    """Quantization-only stand-in (no transport change): what the update
+    *sees* under compression; used for convergence tests on 1 device."""
+    q, scale = quantize_int8(g.astype(jnp.float32))
+    return dequantize_int8(q, scale).astype(g.dtype)
+
+
+def make_feedback_state(grads: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def apply_compression(grads: PyTree, feedback: PyTree) -> Tuple[PyTree, PyTree]:
+    """Tree-wise error-feedback quantization (transport-agnostic)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(feedback)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress_with_feedback(g.astype(jnp.float32), r)
+        out_g.append(dequantize_int8(q, s).astype(g.dtype))
+        out_r.append(nr)
+    unflat = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+    return unflat(out_g), unflat(out_r)

@@ -1,0 +1,61 @@
+"""Elastic scaling: re-form the mesh after membership changes and reshard.
+
+Recovery protocol at node failure (driven by launch/train.py):
+
+  1. coordinator.step_barrier times out -> straggler set identified
+     (the XF barrier's unset flags — core/coordinator);
+  2. the failed hosts are evicted (membership epoch bump under the ticket
+     mutex), a new mesh shape is chosen from the survivors;
+  3. the latest *committed* checkpoint is restored with the new mesh's
+     shardings (checkpoint tensors are device-layout-agnostic npz) and
+     training resumes at the checkpointed step.
+
+``choose_mesh_shape`` prefers shrinking the data axis (pure-DP loss) and
+keeps the model axis intact (TP re-sharding would change per-op shapes);
+``reshard`` moves a host tree onto the new mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+PyTree = Any
+
+
+def choose_mesh_shape(n_devices: int, model_parallel: int,
+                      pods: int = 1) -> Tuple[int, ...]:
+    """Largest (pod, data, model) grid fitting n_devices, model fixed."""
+    if n_devices % (model_parallel * pods):
+        # degrade pods before degrading model parallelism
+        pods = 1
+    data = n_devices // (model_parallel * pods)
+    if data < 1:
+        raise ValueError(
+            f"cannot fit model_parallel={model_parallel} on {n_devices}")
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)
+
+
+def make_mesh_from_shape(shape: Tuple[int, ...]) -> Mesh:
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def reshard(tree: PyTree, shardings: PyTree) -> PyTree:
+    """Device-put a (host or device) tree onto new shardings."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        tree, shardings)
+
+
+def survivors_mesh(alive: int, old_model: int, pods: int = 1) -> Tuple[int, ...]:
+    """Mesh for the surviving device count, keeping TP degree."""
+    usable = (alive // old_model) * old_model
+    if usable == 0:
+        raise ValueError("not enough survivors for one model replica")
+    return choose_mesh_shape(usable, old_model, pods=pods)

@@ -1,0 +1,136 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, fp32 state.
+
+Self-contained (no optax in the container). Moment tensors inherit the
+parameter PartitionSpecs, so under FSDP the optimizer state is fully
+sharded (ZeRO-style) with no extra code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # Memory knobs for the 100B+ cells (DESIGN.md §3): Adafactor-style
+    # factored second moment (rank-1 over the trailing two dims) and
+    # reduced-precision first moment.
+    factored_second_moment: bool = False
+    momentum_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _is_factored(cfg: AdamWConfig, shape) -> bool:
+    return cfg.factored_second_moment and len(shape) >= 2 \
+        and shape[-1] >= 16 and shape[-2] >= 16
+
+
+def init(cfg: AdamWConfig, params: PyTree) -> AdamWState:
+    mdtype = jnp.dtype(cfg.momentum_dtype)
+
+    def mk_m(p):
+        return jnp.zeros(p.shape, mdtype)
+
+    def mk_v(p):
+        if _is_factored(cfg, p.shape):
+            return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(mk_m, params),
+        v=jax.tree_util.tree_map(mk_v, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+           params: PyTree) -> Tuple[PyTree, AdamWState, dict]:
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.float32(1.0)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    mdtype = jnp.dtype(cfg.momentum_dtype)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        if isinstance(v, dict):  # factored second moment (Adafactor-style)
+            g2 = jnp.square(g) + 1e-30
+            row = cfg.b2 * v["row"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            col = cfg.b2 * v["col"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            v_new = {"row": row, "col": col}
+            vhat = (row[..., None] * col[..., None, :]
+                    / jnp.maximum(jnp.mean(row, axis=-1,
+                                           keepdims=True)[..., None], 1e-30))
+            vhat = vhat / b2c
+        else:
+            v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            vhat = v_new / b2c
+        mhat = m_new / b1c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m_new.astype(mdtype), v_new
+
+    is_v_leaf = lambda x: isinstance(x, dict) and set(x) == {"row", "col"}
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v, is_leaf=is_v_leaf)
+    flat_p = jax.tree_util.tree_leaves(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        pn, mn, vn = upd(g, m, v, p)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    unflat = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+    vdef = jax.tree_util.tree_structure(state.v, is_leaf=is_v_leaf)
+    return (unflat(new_p),
+            AdamWState(count=count, m=unflat(new_m),
+                       v=jax.tree_util.tree_unflatten(vdef, new_v)),
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the default single CPU device; only the dry-run subprocess
+# tests set XLA_FLAGS for multiple host devices (in their own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

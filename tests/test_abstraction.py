@@ -1,0 +1,61 @@
+"""Machine abstraction: parameters, classification, Table-5 selection."""
+
+import math
+
+from repro.core.abstraction import (FERMI, TESLA, TPU_V5E, PrimitiveKind,
+                                    classify, select_impl)
+
+
+def test_p1_ratios_match_paper():
+    # paper Table 3: contentious atomics 92x (Tesla) / ~3x (Fermi)
+    assert 85 < TESLA.atomic_volatile_ratio < 100
+    assert 2 < FERMI.atomic_volatile_ratio < 4
+
+
+def test_p2_ratios_match_paper():
+    # paper Table 2: volatile contention 1.44x (Tesla) / 11.5x (Fermi)
+    assert 1.2 < TESLA.contention_ratio < 1.7
+    assert 10 < FERMI.contention_ratio < 13
+
+
+def test_p3_line_hostage():
+    assert not TESLA.line_hostage
+    assert FERMI.line_hostage
+
+
+def test_classification():
+    assert classify(TESLA) == "tesla-class"
+    assert classify(FERMI) == "fermi-class"
+    assert classify(TPU_V5E) == "no-atomics"
+    assert not TPU_V5E.has_atomics
+    assert math.isinf(TPU_V5E.atomic_volatile_ratio)
+
+
+def test_table5_selection_reproduced():
+    """select_impl must reproduce the paper's Table 5 from the ratios."""
+    assert select_impl(TESLA, PrimitiveKind.BARRIER).algorithm == "xf"
+    assert select_impl(FERMI, PrimitiveKind.BARRIER).algorithm == "xf"
+    assert select_impl(TESLA, PrimitiveKind.MUTEX).algorithm == "fa"
+    assert select_impl(FERMI, PrimitiveKind.MUTEX).algorithm == "spin_backoff"
+    assert select_impl(TESLA, PrimitiveKind.SEMAPHORE,
+                       semaphore_initial=1).algorithm == "sleeping"
+    assert select_impl(FERMI, PrimitiveKind.SEMAPHORE,
+                       semaphore_initial=1).algorithm == "spin_backoff"
+    assert select_impl(TESLA, PrimitiveKind.SEMAPHORE,
+                       semaphore_initial=120).algorithm == "sleeping"
+    assert select_impl(FERMI, PrimitiveKind.SEMAPHORE,
+                       semaphore_initial=120).algorithm == "sleeping"
+
+
+def test_no_atomics_machine_gets_flag_algorithms():
+    assert select_impl(TPU_V5E, PrimitiveKind.MUTEX).algorithm == "fa"
+    assert select_impl(TPU_V5E, PrimitiveKind.BARRIER).algorithm == "xf"
+    assert select_impl(TPU_V5E, PrimitiveKind.SEMAPHORE).algorithm == "sleeping"
+
+
+def test_service_time_derivations():
+    # contentious throughput: 240k accesses in 78.407 ms
+    svc = TESLA.atomic_service_us(write=False)
+    assert abs(svc - 78.407e3 / 240_000) < 1e-6
+    # noncontentious latency: 0.59 ms per 1000 reads
+    assert abs(TESLA.volatile_latency_us(False) - 0.59) < 1e-9

@@ -1,0 +1,104 @@
+"""Attention paths vs the O(S^2) oracle + head-plan equivalences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (attention_out, banded_attention,
+                                    blocked_attention, expand_kv, head_plan,
+                                    kv_chunked_attention,
+                                    naive_reference_attention)
+
+
+def _qkv(key, b, s, t, h, kv, hd):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kv, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,t,h,kv,hd,causal,window", [
+    (64, 64, 4, 2, 16, True, None),
+    (64, 64, 4, 1, 16, True, 24),
+    (48, 96, 4, 4, 16, False, None),
+    (128, 128, 8, 2, 32, True, None),
+    (40, 40, 6, 3, 8, True, None),     # non-pow2
+])
+def test_blocked_attention_vs_oracle(s, t, h, kv, hd, causal, window):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, s, t, h, kv, hd)
+    ke, ve = expand_kv(k, h), expand_kv(v, h)
+    got = blocked_attention(q, ke, ve, causal=causal, window=window,
+                            q_chunk=16, kv_chunk=16)
+    want = naive_reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_kv_chunked_vs_oracle(causal):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 64, 64, 4, 2, 16)
+    ke, ve = expand_kv(k, 4), expand_kv(v, 4)
+    got = kv_chunked_attention(q, ke, ve, causal=causal, kv_chunk=16)
+    want = naive_reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_banded_vs_oracle(window):
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 64, 64, 4, 4, 16)
+    ke, ve = expand_kv(k, 4), expand_kv(v, 4)
+    got = banded_attention(q, ke, ve, window=window)
+    want = naive_reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_head_padding_is_inert():
+    """Zero-padded q heads + masked wo == unpadded computation."""
+    b, s, h, hd, d = 2, 32, 6, 8, 24
+    key = jax.random.PRNGKey(3)
+    q, k, v = _qkv(key, b, s, s, h, 3, hd)
+    wo = jax.random.normal(jax.random.PRNGKey(4), (h, hd, d), jnp.float32)
+
+    # unpadded
+    y = blocked_attention(q, expand_kv(k, h), expand_kv(v, h),
+                          causal=True, q_chunk=8, kv_chunk=8)
+    out_ref = attention_out({"wo": wo}, y, h)
+
+    # padded to 8 heads: extra q heads get random garbage, wo rows zeroed
+    hp = 8
+    q_pad = jnp.concatenate(
+        [q, jax.random.normal(jax.random.PRNGKey(5), (b, s, hp - h, hd))],
+        axis=2)
+    wo_pad = jnp.concatenate(
+        [wo, jax.random.normal(jax.random.PRNGKey(6), (hp - h, hd, d))],
+        axis=0)
+    y_pad = blocked_attention(q_pad, expand_kv(k, h, pad_to=hp),
+                              expand_kv(v, h, pad_to=hp),
+                              causal=True, q_chunk=8, kv_chunk=8)
+    out_pad = attention_out({"wo": wo_pad}, y_pad, h)
+    np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out_ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_head_plan_decisions():
+    assert head_plan(64, 16) == ("shard", 64)
+    assert head_plan(40, 16) == ("pad", 48)
+    assert head_plan(24, 16) == ("pad", 32)
+    assert head_plan(12, 16) == ("pad", 16)
+    assert head_plan(4, 16) == ("seq", 4)
+    assert head_plan(40, 1) == ("shard", 40)  # no policy -> exact
+
+
+def test_expand_kv_mapping():
+    k = jnp.arange(2 * 4 * 2 * 3, dtype=jnp.float32).reshape(2, 4, 2, 3)
+    ke = expand_kv(k, 6)  # 2 kv heads -> 6 q heads, groups of 3
+    for h in range(6):
+        np.testing.assert_array_equal(
+            np.asarray(ke[:, :, h]), np.asarray(k[:, :, h // 3]))
+    kep = expand_kv(k, 6, pad_to=8)
+    assert kep.shape[2] == 8
+    assert np.all(np.asarray(kep[:, :, 6:]) == 0)

@@ -1,0 +1,92 @@
+"""Control plane: barriers w/ stragglers, heartbeats, membership, fences."""
+
+import threading
+
+from repro.core.coordinator import (ClusterCoordinator, InMemoryKV,
+                                    KVCoordinator)
+
+
+def _run(n, fn):
+    ts = [threading.Thread(target=fn, args=(r,)) for r in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+
+def test_step_barrier_and_fence():
+    c = ClusterCoordinator(4, barrier_timeout_s=10)
+    ok = [True] * 4
+
+    def host(r):
+        for step in range(15):
+            c.heartbeat(r, step)
+            if not c.step_barrier(r).ok:
+                ok[r] = False
+        if not c.checkpoint_fence(r):
+            ok[r] = False
+
+    _run(4, host)
+    assert all(ok)
+
+
+def test_straggler_attribution_on_timeout():
+    c = ClusterCoordinator(3, barrier_timeout_s=0.3)
+    outcomes = {}
+
+    def host(r):
+        outcomes[r] = c.step_barrier(r)
+
+    # rank 2 never arrives
+    _run(2, host)
+    assert not outcomes[0].ok
+    assert outcomes[0].stragglers == [2]
+
+
+def test_heartbeat_stragglers():
+    c = ClusterCoordinator(4, heartbeat_lag_steps=2)
+    for r in range(4):
+        c.heartbeat(r, 10)
+    c.heartbeat(3, 3)  # rank 3 fell behind
+    assert c.stragglers() == [3]
+
+
+def test_membership_evict_join():
+    c = ClusterCoordinator(4)
+    v0 = c.view()
+    assert v0.world_size == 4
+    v1 = c.evict(2)
+    assert v1.alive == [0, 1, 3]
+    assert v1.epoch == v0.epoch + 1
+    v2 = c.join(2)
+    assert v2.alive == [0, 1, 2, 3]
+    assert v2.epoch == v1.epoch + 1
+
+
+def test_kv_coordinator_barrier():
+    kv = InMemoryKV()
+    coords = [KVCoordinator(kv, 3, r) for r in range(3)]
+    outs = [None] * 3
+
+    def host(r):
+        outs[r] = coords[r].barrier(timeout_s=10)
+
+    _run(3, host)
+    assert all(o.ok for o in outs)
+
+
+def test_kv_coordinator_straggler():
+    kv = InMemoryKV()
+    coords = [KVCoordinator(kv, 3, r, barrier_timeout_s=0.3)
+              for r in range(3)]
+    outs = {}
+
+    def host(r):
+        outs[r] = coords[r].barrier()
+
+    _run(2, host)  # rank 2 absent
+    assert not outs[0].ok
+    assert outs[0].stragglers == [2]
+    hb = coords[0]
+    hb.heartbeat(5)
+    assert coords[1].read_heartbeats()[0] == 5

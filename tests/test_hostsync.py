@@ -1,0 +1,122 @@
+"""Real-thread correctness of the host primitives (the control plane)."""
+
+import threading
+
+import pytest
+
+from repro.core.abstraction import WaitStrategy
+from repro.core.hostsync import (AtomicWord, CentralizedBarrier, FutexMutex,
+                                 SleepingSemaphore, SpinMutex, SpinSemaphore,
+                                 TicketMutex, XFBarrier, make_barrier,
+                                 make_mutex, make_semaphore)
+
+
+def _hammer(n_threads, fn):
+    ts = [threading.Thread(target=fn, args=(i,)) for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+
+@pytest.mark.parametrize("mutex_cls", [SpinMutex, TicketMutex, FutexMutex])
+def test_mutex_protects_counter(mutex_cls):
+    m = mutex_cls()
+    state = {"x": 0}
+
+    def worker(tid):
+        for _ in range(1500):
+            m.lock()
+            state["x"] += 1
+            m.unlock()
+
+    _hammer(6, worker)
+    assert state["x"] == 9000
+
+
+@pytest.mark.parametrize("sem_cls", [SleepingSemaphore, SpinSemaphore])
+def test_semaphore_capacity(sem_cls):
+    cap = 3
+    s = sem_cls(cap)
+    gauge = AtomicWord(0)
+    max_seen = AtomicWord(0)
+
+    def worker(tid):
+        for _ in range(200):
+            s.wait()
+            now = gauge.fetch_add(1) + 1
+            # racy max update is fine: we only need an upper-bound witness
+            if now > max_seen.load():
+                max_seen.store(now)
+            gauge.fetch_add(-1)
+            s.post()
+
+    _hammer(8, worker)
+    assert max_seen.load() <= cap
+    assert gauge.load() == 0
+
+
+@pytest.mark.parametrize("bar_cls", [XFBarrier, CentralizedBarrier])
+def test_barrier_rounds(bar_cls):
+    n = 5
+    b = bar_cls(n)
+    counts = [0] * n
+
+    def worker(tid):
+        for round_ in range(40):
+            counts[tid] += 1
+            assert b.arrive_and_wait(tid, timeout=20)
+            # after the barrier, every thread must have matched my round
+            assert min(counts) >= round_ + 1 or max(counts) <= round_ + 1
+
+    _hammer(n, worker)
+    assert counts == [40] * n
+
+
+def test_xf_barrier_timeout_names_stragglers():
+    b = XFBarrier(4)
+    results = {}
+
+    def arriving(tid):
+        results[tid] = b.arrive_and_wait(tid, timeout=0.3)
+
+    ts = [threading.Thread(target=arriving, args=(i,)) for i in range(3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert results[0] is False  # master timed out
+    assert b.waiting_on() == [3]
+
+
+def test_ticket_mutex_is_fifo():
+    m = TicketMutex()
+    order = []
+    gate = threading.Barrier(4)
+
+    def worker(tid):
+        gate.wait()
+        for _ in range(50):
+            m.lock()
+            order.append(tid)
+            m.unlock()
+
+    _hammer(4, worker)
+    # every thread completed all ops; total grants == 200
+    assert len(order) == 200
+    assert set(order) == {0, 1, 2, 3}
+
+
+def test_sleeping_semaphore_under_capacity_never_waits():
+    s = SleepingSemaphore(4)
+    assert s.wait(timeout=0.01)
+    assert s.wait(timeout=0.01)
+    s.post()
+    s.post()
+
+
+def test_factories():
+    assert isinstance(make_mutex("fa"), TicketMutex)
+    assert isinstance(make_mutex("auto"), FutexMutex)  # hosts can block
+    assert isinstance(make_semaphore(2, "auto"), SleepingSemaphore)
+    assert isinstance(make_barrier(3, "auto"), XFBarrier)

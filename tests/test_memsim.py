@@ -1,0 +1,88 @@
+"""Discrete-event memory simulator: Table-1 self-consistency + mechanics."""
+
+import pytest
+
+from repro.core.abstraction import FERMI, TESLA
+from repro.core.memsim import LINE_WORDS, MemSim, line_of, run_membench
+
+# (atomic, contentious, preceded, write) -> paper ms, tolerance factor
+TABLE1_READS = {
+    ("tesla", False, True, False): (0.848, 1.10),
+    ("tesla", False, False, False): (0.590, 1.10),
+    ("tesla", True, True, False): (78.407, 1.10),
+    ("fermi", False, True, False): (0.494, 1.10),
+    ("fermi", False, False, False): (0.043, 1.10),
+    ("fermi", True, True, False): (1.479, 1.10),
+}
+
+
+@pytest.mark.parametrize("machine_name,atomic,contentious", [
+    ("tesla", False, True), ("tesla", False, False), ("tesla", True, True),
+    ("fermi", False, True), ("fermi", False, False), ("fermi", True, True),
+])
+def test_table1_reads_within_10pct(machine_name, atomic, contentious):
+    m = TESLA if machine_name == "tesla" else FERMI
+    paper, tol = TABLE1_READS[(machine_name, atomic, contentious, False)]
+    sim = run_membench(m, atomic=atomic, contentious=contentious,
+                       write=False, accesses=150)
+    assert paper / tol < sim < paper * tol, (sim, paper)
+
+
+def test_fermi_line_hostage_cascade():
+    """Volatile-after-atomic under contention collapses to atomic speed on
+    Fermi (paper Section 3) but not on Tesla."""
+    fermi_vpa = run_membench(FERMI, atomic=False, contentious=True,
+                             write=False, preceded_by_atomic=True,
+                             accesses=150)
+    fermi_atomic = run_membench(FERMI, atomic=True, contentious=True,
+                                write=False, accesses=150)
+    assert fermi_vpa > 0.8 * fermi_atomic  # cascaded to atomic cost
+
+    tesla_vpa = run_membench(TESLA, atomic=False, contentious=True,
+                             write=False, preceded_by_atomic=True,
+                             accesses=150)
+    tesla_vol = run_membench(TESLA, atomic=False, contentious=True,
+                             write=False, accesses=150)
+    assert tesla_vpa < 2.0 * tesla_vol  # no hostage on Tesla
+
+
+def test_atomicity_of_rmw():
+    """Concurrent atomic_adds never lose updates."""
+    sim = MemSim(TESLA)
+
+    def prog(s, bid):
+        for _ in range(50):
+            yield ("atomic_add", 0, 1)
+
+    sim.run([prog] * 16)
+    assert sim.peek(0) == 16 * 50
+
+
+def test_line_mapping():
+    assert line_of(0) == line_of(LINE_WORDS - 1)
+    assert line_of(LINE_WORDS) == 1
+
+
+def test_deadlock_detection():
+    sim = MemSim(TESLA)
+
+    def stuck(s, bid):
+        while True:
+            v = yield ("load", 0)
+            if v == 42:  # never stored by anyone
+                break
+
+    with pytest.raises(RuntimeError):
+        sim.run([stuck], max_events=10_000)
+
+
+def test_scan_and_broadcast_ops():
+    sim = MemSim(FERMI)
+
+    def prog(s, bid):
+        yield ("broadcast_store", 0, 10, 7)
+        ok = yield ("scan_flags", 0, 10, 7)
+        assert ok
+
+    sim.run([prog])
+    assert all(sim.peek(i) == 7 for i in range(10))

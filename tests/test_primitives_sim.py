@@ -1,0 +1,134 @@
+"""The paper's algorithms on the simulator: safety + performance claims.
+
+Safety invariants (mutual exclusion, semaphore occupancy bound, FIFO
+fairness) are property-tested with hypothesis over machine/concurrency.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.abstraction import FERMI, TESLA
+from repro.core.primitives_sim import (BackoffConfig, run_primitive)
+
+MACHINES = {"tesla": TESLA, "fermi": FERMI}
+
+
+# ------------------------------------------------------------------ safety
+@settings(max_examples=12, deadline=None)
+@given(
+    machine=st.sampled_from(["tesla", "fermi"]),
+    impl=st.sampled_from(["spin", "spin_backoff", "fa", "fa_backoff"]),
+    blocks=st.integers(2, 24),
+)
+def test_mutex_mutual_exclusion(machine, impl, blocks):
+    r = run_primitive(MACHINES[machine], "mutex", impl, blocks=blocks,
+                      ops=6, cs_us=0.05, max_events=4_000_000)
+    assert r.violations == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    machine=st.sampled_from(["tesla", "fermi"]),
+    impl=st.sampled_from(["sleeping", "spin_backoff"]),
+    blocks=st.integers(2, 24),
+    initial=st.integers(1, 8),
+)
+def test_semaphore_capacity_bound(machine, impl, blocks, initial):
+    r = run_primitive(MACHINES[machine], "semaphore", impl, blocks=blocks,
+                      ops=5, initial=initial, cs_us=0.05,
+                      max_events=4_000_000)
+    assert r.violations == 0
+
+
+@pytest.mark.parametrize("machine", ["tesla", "fermi"])
+def test_fa_mutex_fifo_fair(machine):
+    r = run_primitive(MACHINES[machine], "mutex", "fa", blocks=16, ops=8)
+    assert r.fair_fifo
+
+
+@pytest.mark.parametrize("machine", ["tesla", "fermi"])
+@pytest.mark.parametrize("impl", ["atomic", "xf"])
+def test_barriers_complete(machine, impl):
+    r = run_primitive(MACHINES[machine], "barrier", impl, blocks=24, ops=10)
+    assert not r.truncated
+    assert r.ops_per_sec > 0
+
+
+# ------------------------------------------------------- atomics accounting
+def test_fa_mutex_bounds_atomics():
+    """Paper's core claim: FA uses exactly one atomic per lock()."""
+    r = run_primitive(TESLA, "mutex", "fa", blocks=8, ops=10)
+    assert r.atomic_ops == 8 * 10  # one ticket FA per op, zero in unlock
+
+
+def test_sleeping_semaphore_bounds_atomics():
+    """<= 2 atomics in wait(), <= 2 in post()."""
+    r = run_primitive(TESLA, "semaphore", "sleeping", blocks=8, ops=10,
+                      initial=2)
+    assert r.atomic_ops <= 8 * 10 * 4
+
+
+def test_spin_mutex_unbounded_atomics():
+    r = run_primitive(TESLA, "mutex", "spin", blocks=16, ops=5,
+                      max_events=4_000_000)
+    assert r.atomic_ops > 16 * 5  # retries burn atomics
+
+
+def test_xf_barrier_uses_no_atomics():
+    r = run_primitive(TESLA, "barrier", "xf", blocks=32, ops=5)
+    assert r.atomic_ops == 0
+
+
+# -------------------------------------------------------- performance claims
+def test_fa_beats_spin_on_tesla_at_scale():
+    """Paper Figure 2 / Section 7 (FA ~40x at 240 blocks; direction +
+    magnitude>5x asserted at a CI-sized scale)."""
+    spin = run_primitive(TESLA, "mutex", "spin", blocks=96, ops=12,
+                         max_events=6_000_000)
+    fa = run_primitive(TESLA, "mutex", "fa", blocks=96, ops=12)
+    assert fa.ops_per_sec > 5 * spin.ops_per_sec
+
+
+def test_spin_backoff_best_mutex_on_fermi():
+    """Paper Table 5: Fermi mutex winner is spin+backoff."""
+    spin = run_primitive(FERMI, "mutex", "spin", blocks=96, ops=12)
+    bo = run_primitive(FERMI, "mutex", "spin_backoff", blocks=96, ops=12)
+    fa = run_primitive(FERMI, "mutex", "fa", blocks=96, ops=12)
+    assert bo.ops_per_sec > spin.ops_per_sec
+    assert bo.ops_per_sec > fa.ops_per_sec
+
+
+def test_xf_beats_atomic_barrier_everywhere():
+    """Paper Figure 1 (3-7x on Tesla per Xiao-Feng; big gap on Fermi too)."""
+    for m in (TESLA, FERMI):
+        atomic = run_primitive(m, "barrier", "atomic", blocks=64, ops=10)
+        xf = run_primitive(m, "barrier", "xf", blocks=64, ops=10)
+        assert xf.ops_per_sec > 2 * atomic.ops_per_sec, m.name
+
+
+def test_sleeping_semaphore_scales_with_capacity():
+    """Paper Figure 3: sleeping semaphore throughput grows with the
+    initial value (under-capacity waits are a single atomic)."""
+    lo = run_primitive(FERMI, "semaphore", "sleeping", blocks=64, ops=8,
+                       initial=2)
+    hi = run_primitive(FERMI, "semaphore", "sleeping", blocks=64, ops=8,
+                       initial=60)
+    assert hi.ops_per_sec > 3 * lo.ops_per_sec
+
+
+def test_sleeping_beats_spin_semaphore_on_tesla():
+    spin = run_primitive(TESLA, "semaphore", "spin_backoff", blocks=48,
+                         ops=6, initial=10, max_events=4_000_000)
+    slp = run_primitive(TESLA, "semaphore", "sleeping", blocks=48, ops=6,
+                        initial=10)
+    assert slp.ops_per_sec > spin.ops_per_sec
+
+
+def test_backoff_config_wraps():
+    bo = BackoffConfig(i_min=2, i_max=4)
+    i = 2
+    seen = []
+    for _ in range(5):
+        seen.append(i)
+        i = bo.advance(i)
+    assert seen == [2, 3, 4, 2, 3]

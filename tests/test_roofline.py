@@ -1,0 +1,99 @@
+"""HLO analyzer (trip counts, flops, collectives) + roofline math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_stats import analyze, parse_module, execution_counts
+from repro.analysis.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
+                                     model_flops)
+from repro.configs.shapes import DECODE_32K, PREFILL_32K, TRAIN_4K
+
+
+def test_unscanned_flops_match_cost_analysis():
+    def g(a, b):
+        return jnp.tanh(a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    c = jax.jit(g).lower(a, b).compile()
+    st = analyze(c.as_text(), n_devices=1)
+    assert st.flops == 2 * 64 * 128 * 256
+    xla = c.cost_analysis().get("flops", 0.0)
+    assert abs(st.total_flops - xla) / xla < 0.05
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(w, x):
+        def body(x, wi):
+            return x @ wi, 0
+        x, _ = jax.lax.scan(body, x, w)
+        return x.sum()
+
+    w = jax.ShapeDtypeStruct((7, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    c = jax.jit(f).lower(w, x).compile()
+    st = analyze(c.as_text(), n_devices=1)
+    assert st.flops == 7 * 2 * 8 * 32 * 32  # 7 iterations counted
+
+
+def test_nested_scan_trip_counts():
+    def f(w, x):
+        def outer(x, wi):
+            def inner(x, _):
+                return x @ wi, 0
+            x, _ = jax.lax.scan(inner, x, jnp.arange(3))
+            return x, 0
+        x, _ = jax.lax.scan(outer, x, w)
+        return x.sum()
+
+    w = jax.ShapeDtypeStruct((5, 16, 16), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    c = jax.jit(f).lower(w, x).compile()
+    st = analyze(c.as_text(), n_devices=1)
+    assert st.flops == 5 * 3 * 2 * 4 * 16 * 16
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        arch="a", shape="train_4k", mesh="16x16", chips=256,
+        flops_per_device=PEAK_FLOPS,           # 1 s of compute
+        bytes_per_device=HBM_BW * 2,           # 2 s of memory
+        collective_wire_bytes=LINK_BW * 0.5,   # 0.5 s of comms
+        collectives={},
+        model_flops_total=PEAK_FLOPS * 256 * 0.5,
+    )
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.step_time_lower_bound - 2.0) < 1e-9
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+    assert abs(r.mfu_bound - 0.25) < 1e-9
+
+
+def test_model_flops_modes():
+    class C:
+        moe = None
+
+    n = 1e9
+    assert model_flops(C(), TRAIN_4K, n) == 6 * n * TRAIN_4K.tokens
+    assert model_flops(C(), PREFILL_32K, n) == 2 * n * PREFILL_32K.tokens
+    assert model_flops(C(), DECODE_32K, n) == 2 * n * DECODE_32K.global_batch
+
+
+def test_parse_module_handles_tuple_index_comments():
+    text = """
+HloModule m
+
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  %t = (f32[4]{0} /*index=0*/, s32[] /*index=1*/) tuple(%p, %c)
+  ROOT %r = f32[4]{0} add(%p, %p)
+}
+"""
+    mod = parse_module(text)
+    assert "main" in mod.computations
+    ops = [i.op for i in mod.computations["main"]]
+    assert "tuple" in ops and "add" in ops

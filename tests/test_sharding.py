@@ -1,0 +1,74 @@
+"""Sharding rules: pspec derivation, conflicts, divisibility, elasticity."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArraySpec
+from repro.sharding.rules import ShardingRules, pspec_for
+from repro.train.elastic import choose_mesh_shape, survivors_mesh
+
+
+class FakeMesh:
+    """Duck-typed mesh (axis_names + shape dict) for spec-derivation tests
+    that must exercise the production 16x16 geometry on one CPU."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_tp_sharding_basic():
+    rules = ShardingRules()
+    assert pspec_for(("embed", "heads", "head_dim"), (8192, 64, 128),
+                     rules, MESH) == P(None, "model", None)
+    assert pspec_for(("embed", "mlp"), (8192, 49152), rules, MESH) == \
+        P(None, "model")
+    assert pspec_for(("vocab", "embed"), (152064, 8192), rules, MESH) == \
+        P("model", None)
+
+
+def test_gqa_kv_fallback_to_replication():
+    rules = ShardingRules()
+    # 8 kv heads % 16 -> replicated
+    assert pspec_for(("embed", "kv_heads", "head_dim"), (8192, 8, 128),
+                     rules, MESH) == P(None, None, None)
+
+
+def test_moe_conflict_resolution():
+    rules = ShardingRules(fsdp=True)
+    # expert wins 'model'; embed takes the data axes (FSDP); mlp replicated
+    got = pspec_for(("expert", "embed", "mlp"), (16, 8192, 24576),
+                    rules, MESH)
+    assert got == P("model", ("data",), None)
+    got3 = pspec_for(("expert", "embed", "mlp"), (16, 8192, 24576),
+                     rules, MESH3)
+    assert got3 == P("model", ("pod", "data"), None)
+
+
+def test_fsdp_divisibility_fallback():
+    rules = ShardingRules(fsdp=True)
+    # embed dim not divisible by 16 -> replicated, no crash
+    assert pspec_for(("embed",), (1150,), rules, MESH) == P(None)
+
+
+def test_layer_axis_never_sharded():
+    rules = ShardingRules()
+    got = pspec_for(("layer", "embed", "mlp"), (40, 5120, 17408), rules, MESH)
+    assert got[0] is None
+
+
+def test_elastic_mesh_shapes():
+    assert choose_mesh_shape(256, 16) == (16, 16)
+    assert choose_mesh_shape(512, 16, pods=2) == (2, 16, 16)
+    # losing 16 devices: data axis shrinks, TP preserved
+    assert survivors_mesh(240, 16) == (15, 16)
+    # losing a partial TP group rounds down
+    assert survivors_mesh(250, 16) == (15, 16)
+    with pytest.raises(ValueError):
+        survivors_mesh(8, 16)

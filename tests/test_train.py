@@ -1,0 +1,236 @@
+"""Optimizer, train loop, checkpointing, data pipeline, compression."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.train import optimizer as opt
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (apply_compression, compress_with_feedback,
+                                     dequantize_int8, make_feedback_state,
+                                     quantize_int8)
+from repro.train.data import BinTokens, Prefetcher, SyntheticLM
+from repro.train.train_loop import make_train_step
+from repro.models import build_model
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_minimizes_quadratic():
+    cfg = opt.AdamWConfig(peak_lr=0.1, warmup_steps=5, total_steps=200,
+                          weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt.init(cfg, params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.update(cfg, grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_adamw_factored_tracks_full():
+    full_cfg = opt.AdamWConfig(peak_lr=0.05, warmup_steps=2, total_steps=100,
+                               weight_decay=0.0, clip_norm=None)
+    fact_cfg = opt.AdamWConfig(peak_lr=0.05, warmup_steps=2, total_steps=100,
+                               weight_decay=0.0, clip_norm=None,
+                               factored_second_moment=True)
+    key = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(key, (24, 32))
+    pf = {"w": w0}
+    pk = {"w": w0}
+    sf = opt.init(full_cfg, pf)
+    sk = opt.init(fact_cfg, pk)
+    assert isinstance(sk.v["w"], dict)  # factored
+    target = jax.random.normal(jax.random.PRNGKey(1), (24, 32))
+    for _ in range(60):
+        gf = pf["w"] - target
+        gk = pk["w"] - target
+        pf, sf, _ = opt.update(full_cfg, {"w": gf}, sf, pf)
+        pk, sk, _ = opt.update(fact_cfg, {"w": gk}, sk, pk)
+    err_full = float(jnp.mean(jnp.abs(pf["w"] - target)))
+    err_fact = float(jnp.mean(jnp.abs(pk["w"] - target)))
+    assert err_fact < 3 * err_full + 0.05
+
+
+def test_grad_clip_and_schedule():
+    cfg = opt.AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                          clip_norm=1.0)
+    assert float(opt.schedule(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(opt.schedule(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(opt.schedule(cfg, jnp.asarray(100))) <= 0.11
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(cfg, params)
+    _, _, m = opt.update(cfg, {"w": jnp.full(4, 100.0)}, state, params)
+    assert float(m["grad_norm"]) > 100
+
+
+# --------------------------------------------------------------- train loop
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_arch("qwen3-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(peak_lr=1e-3, warmup_steps=1, total_steps=10)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    s1 = opt.init(ocfg, params)
+    step1 = make_train_step(model, ocfg, num_microbatches=1, remat=False)
+    p1, _, m1 = jax.jit(step1)(params, s1, batch)
+
+    s2 = opt.init(ocfg, params)
+    step2 = make_train_step(model, ocfg, num_microbatches=2, remat=True)
+    p2, _, m2 = jax.jit(step2)(params, s2, batch)
+
+    # same gradients (up to accumulation-order fp error) => same update
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)
+
+
+def test_training_reduces_loss():
+    cfg = get_arch("olmoe-1b-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(peak_lr=2e-3, warmup_steps=3, total_steps=30)
+    state = opt.init(ocfg, params)
+    step = jax.jit(make_train_step(model, ocfg, num_microbatches=1,
+                                   remat=True))
+    ds = SyntheticLM(cfg.vocab_size, 4, 24, seed=3)
+    losses = []
+    for i, raw in enumerate(ds):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        params, state, metrics = step(params, state, batch)
+        losses.append(float(metrics["loss"]))
+        if i >= 7:
+            break
+    assert losses[-1] < losses[0]
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d, keep_n=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        for step in (1, 2, 3):
+            ck.save(step, tree)
+        assert ck.all_steps() == [2, 3]  # keep_n GC
+        got = ck.restore(3, tree)
+        for x, y in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_ignores_uncommitted():
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d)
+        tree = {"a": jnp.ones(3)}
+        ck.save(5, tree)
+        # a crashed save: directory without COMMIT
+        os.makedirs(os.path.join(d, "step_00000009"))
+        assert ck.latest_step() == 5
+        step, _ = ck.restore_latest(tree)
+        assert step == 5
+
+
+def test_checkpoint_async_and_shape_mismatch():
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d)
+        ck.save_async(1, {"a": jnp.ones((2, 2))})
+        ck.wait()
+        with pytest.raises(ValueError):
+            ck.restore(1, {"a": jnp.ones((3, 3))})
+
+
+# --------------------------------------------------------------------- data
+def test_synthetic_data_resumable():
+    a = SyntheticLM(100, 2, 8, seed=1, start_step=5)
+    b = SyntheticLM(100, 2, 8, seed=1, start_step=5)
+    na, nb = next(a), next(b)
+    np.testing.assert_array_equal(na["tokens"], nb["tokens"])
+    # labels are next-token shifted
+    c = SyntheticLM(100, 2, 8, seed=2)
+    batch = next(c)
+    assert batch["tokens"].shape == (2, 8)
+    assert batch["labels"].shape == (2, 8)
+
+
+def test_bin_tokens_and_prefetcher():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "toks.bin")
+        np.arange(4000, dtype=np.uint16).tofile(path)
+        ds = BinTokens(path, vocab_size=500, batch=2, seq_len=16)
+        b1 = next(ds)
+        assert b1["tokens"].shape == (2, 16)
+        assert b1["tokens"].max() < 500
+        pf = Prefetcher(ds, depth=2)
+        b2 = next(pf)
+        assert b2["tokens"].shape == (2, 16)
+        pf.close()
+
+
+# -------------------------------------------------------------- compression
+def test_quantize_roundtrip_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, s = quantize_int8(g)
+    err = jnp.abs(dequantize_int8(q, s) - g)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_preserves_sum():
+    """Accumulated compressed updates converge to accumulated true grads."""
+    key = jax.random.PRNGKey(0)
+    residual = jnp.zeros(256)
+    total_true = jnp.zeros(256)
+    total_sent = jnp.zeros(256)
+    for i in range(50):
+        g = jax.random.normal(jax.random.fold_in(key, i), (256,))
+        q, s, residual = compress_with_feedback(g, residual)
+        total_sent = total_sent + dequantize_int8(q, s)
+        total_true = total_true + g
+    # residual bounds the cumulative divergence
+    np.testing.assert_allclose(np.asarray(total_sent + residual),
+                               np.asarray(total_true), atol=1e-3)
+
+
+def test_apply_compression_tree():
+    grads = {"a": jnp.ones((8, 8)), "b": jnp.full((4,), -2.0)}
+    fb = make_feedback_state(grads)
+    cg, fb2 = apply_compression(grads, fb)
+    assert jax.tree_util.tree_structure(cg) == jax.tree_util.tree_structure(grads)
+    np.testing.assert_allclose(np.asarray(cg["a"]), np.ones((8, 8)),
+                               atol=0.02)
+
+
+def test_two_level_remat_matches_flat():
+    """sqrt-N grouped remat (models/lm.py) must be gradient-equivalent."""
+    import dataclasses
+    import os
+
+    cfg = dataclasses.replace(get_arch("qwen3-14b").reduced(), num_layers=16)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    os.environ["REPRO_FLAT_REMAT"] = "1"
+    try:
+        m1 = build_model(cfg)
+        m1.remat = True
+        params = m1.init(jax.random.PRNGKey(0))
+        g1 = jax.grad(lambda p: m1.loss_fn(p, batch)[0])(params)
+    finally:
+        del os.environ["REPRO_FLAT_REMAT"]
+    m2 = build_model(cfg)
+    m2.remat = True
+    assert m2._remat_group() == 4
+    g2 = jax.grad(lambda p: m2.loss_fn(p, batch)[0])(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-4)
