@@ -1,0 +1,177 @@
+"""Serving benchmark: legacy per-request loop vs slot-pool batching.
+
+Measures tokens/s and queue-wait percentiles (p50/p99) under Poisson
+arrivals at several concurrency budgets K, for
+
+  * ``legacy``  — the old per-request Python decode loop (sequential),
+  * ``slots``   — the semaphore-gated continuous-batching slot engine,
+
+plus the Algorithm-5 kernel-planned wait percentiles for the same trace,
+so the predicted and measured timelines can be compared.
+
+  PYTHONPATH=src python benchmarks/servebench.py --smoke
+
+``--smoke`` runs a reduced sweep and writes ``BENCH_serve.json`` so CI
+records the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def poisson_arrival_steps(n: int, capacity: int, new_tokens: int,
+                          load: float, rng) -> np.ndarray:
+    """Arrival step-times for offered load ``load`` (fraction of replica
+    token throughput: rate = load * K / service_steps)."""
+    rate = load * capacity / float(new_tokens)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.floor(np.cumsum(gaps)).astype(np.int64)
+
+
+def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
+                      new_tokens, decode_chunk, seed):
+    from repro.serve.engine import SlotServeEngine
+    n, prompt_len = prompts.shape
+    max_len = prompt_len + new_tokens + 1
+    engine = SlotServeEngine(model, params, capacity=capacity,
+                             max_len=max_len, decode_chunk=decode_chunk,
+                             seed=seed)
+    # warm the prefill/decode traces outside the timed region, then
+    # reset every counter the report reads (step clock included, so the
+    # arrival schedule starts at 0)
+    engine.submit(prompts[0], max_new_tokens=min(2, new_tokens))
+    engine.run_until_done()
+    engine.finished.clear()
+    engine.grant_log.clear()
+    engine.decode_dispatches = 0
+    engine.step_clock = 0
+    engine.admission.admitted = engine.admission.completed = 0
+
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < n or engine.queue or engine.active:
+        while nxt < n and arrivals[nxt] <= engine.step_clock:
+            engine.submit(prompts[nxt], new_tokens)
+            nxt += 1
+        if engine.step() == 0 and not engine.queue and nxt < n:
+            engine.step_clock += 1          # idle tick until next arrival
+    dt = time.perf_counter() - t0
+    st = engine.stats()
+    fifo_ok = engine.grant_log == sorted(engine.grant_log)
+    return {
+        "tokens": int(st["tokens"]),
+        "wall_s": dt,
+        "tok_per_s": st["tokens"] / dt,
+        "p50_wait_steps": st["p50_wait_steps"],
+        "p99_wait_steps": st["p99_wait_steps"],
+        "decode_dispatches": int(st["decode_dispatches"]),
+        "fifo_ok": bool(fifo_ok),
+    }
+
+
+def bench_legacy(model, params, prompts, *, new_tokens):
+    from repro.serve.engine import ServeEngine
+    n, prompt_len = prompts.shape
+    max_len = prompt_len + new_tokens + 1
+    engine = ServeEngine(model, params, max_len=max_len)
+    engine.generate({"tokens": jnp.asarray(prompts[0])[None, :]}, 2)  # warm
+
+    t0 = time.perf_counter()
+    waits, tokens = [], 0
+    for i in range(n):
+        waits.append(time.perf_counter() - t0)   # all arrive at t=0
+        out = engine.generate(
+            {"tokens": jnp.asarray(prompts[i])[None, :]}, new_tokens)
+        tokens += int(out.tokens.size)
+    dt = time.perf_counter() - t0
+    return {
+        "tokens": tokens,
+        "wall_s": dt,
+        "tok_per_s": tokens / dt,
+        "p50_wait_s": float(np.median(waits)),
+        "p99_wait_s": float(np.percentile(waits, 99)),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--capacities", type=int, nargs="+",
+                    default=[1, 4, 8])
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--decode-chunk", type=int, default=2)
+    ap.add_argument("--load", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve.scheduler import plan_admission
+
+    cfg = get_arch(args.arch)
+    cfg = cfg.reduced()  # this bench targets the CPU smoke tier
+    if args.smoke:
+        args.requests = min(args.requests, 12)
+        args.capacities = [1, 4]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.requests, args.prompt_len)).astype(np.int32)
+
+    legacy = bench_legacy(model, params, prompts,
+                          new_tokens=args.new_tokens)
+    print(f"legacy_loop,tok_per_s={legacy['tok_per_s']:.1f},"
+          f"p50_wait_s={legacy['p50_wait_s']:.2f},"
+          f"p99_wait_s={legacy['p99_wait_s']:.2f}")
+
+    rows = {"arch": cfg.name, "requests": args.requests,
+            "prompt_len": args.prompt_len, "new_tokens": args.new_tokens,
+            "decode_chunk": args.decode_chunk, "load": args.load,
+            "legacy": legacy, "slots": {}}
+    for k in args.capacities:
+        arrivals = poisson_arrival_steps(
+            args.requests, k, args.new_tokens, args.load, rng)
+        plan = plan_admission(arrivals.astype(np.float32),
+                              np.full(args.requests, float(args.new_tokens),
+                                      np.float32), k)
+        got = bench_slot_engine(
+            model, params, prompts, arrivals, capacity=k,
+            new_tokens=args.new_tokens, decode_chunk=args.decode_chunk,
+            seed=args.seed)
+        got["plan_p50_wait_steps"] = plan.p50_wait
+        got["plan_p99_wait_steps"] = plan.p99_wait
+        got["speedup_vs_legacy"] = got["tok_per_s"] / legacy["tok_per_s"]
+        rows["slots"][str(k)] = got
+        print(f"slot_engine_K{k},tok_per_s={got['tok_per_s']:.1f},"
+              f"p50_wait_steps={got['p50_wait_steps']:.1f},"
+              f"p99_wait_steps={got['p99_wait_steps']:.1f},"
+              f"plan_p50={got['plan_p50_wait_steps']:.1f},"
+              f"plan_p99={got['plan_p99_wait_steps']:.1f},"
+              f"speedup={got['speedup_vs_legacy']:.2f}x,"
+              f"fifo_ok={got['fifo_ok']}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {args.out}")
+
+    batched = [v for kk, v in rows["slots"].items() if int(kk) > 1]
+    if batched and not all(v["speedup_vs_legacy"] > 1.0 for v in batched):
+        print("# WARNING: slot engine not faster than legacy at batch > 1")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 _BIG = 3.4e38  # python literal: traced into the kernel as an immediate
 
 
@@ -121,7 +123,7 @@ def sleeping_semaphore_pallas(
             pltpu.SMEM((2,), jnp.int32),
             pltpu.VMEM((1, k_pad), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

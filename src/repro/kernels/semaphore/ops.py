@@ -5,6 +5,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import numpy as np
 
 from .kernel import sleeping_semaphore_pallas
 from .ref import sleeping_semaphore_ref
@@ -24,3 +25,36 @@ def semaphore_admission(arrive_t, hold, *, capacity: int,
         return sleeping_semaphore_pallas(
             arrive_t, hold, capacity, interpret=interpret)
     return sleeping_semaphore_ref(arrive_t, hold, capacity)
+
+
+def semaphore_admission_window(arrive_t, hold, *, capacity: int,
+                               window: int = 32, interpret: bool = True,
+                               use_kernel: bool = True):
+    """Fixed-shape admission planning for the serving hot loop.
+
+    ``semaphore_admission`` compiles per input length; the slot engine
+    replans admission every scheduler round with a varying number of
+    in-flight + queued requests, which would retrace the kernel each
+    round. This wrapper pads the trace to a fixed ``window`` with
+    far-future zero-hold arrivals (they keep the arrival sort ascending
+    and can never steal a slot from a real request before it is granted)
+    so one compiled kernel serves every round, then slices the padding
+    back off. Traces longer than the window raise — callers pick the
+    window from their capacity + queue bound.
+
+    Returns numpy ``(grant, release, waited)`` of the original length.
+    """
+    arrive_t = np.asarray(arrive_t, np.float32)
+    hold = np.asarray(hold, np.float32)
+    n = arrive_t.shape[0]
+    if n > window:
+        raise ValueError(f"admission trace ({n}) exceeds planning "
+                         f"window ({window})")
+    horizon = (float(arrive_t.max()) if n else 0.0) + 1e6
+    pad_arr = horizon + np.arange(window - n, dtype=np.float32)
+    a = np.concatenate([arrive_t, pad_arr])
+    h = np.concatenate([hold, np.zeros(window - n, np.float32)])
+    grant, release, waited = semaphore_admission(
+        a, h, capacity=capacity, interpret=interpret, use_kernel=use_kernel)
+    return (np.asarray(grant)[:n], np.asarray(release)[:n],
+            np.asarray(waited)[:n])

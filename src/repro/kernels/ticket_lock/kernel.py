@@ -28,10 +28,14 @@ loop as the barrier's; on one core it exits on the first check.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 
 def ticket_lock_kernel(
@@ -42,6 +46,8 @@ def ticket_lock_kernel(
     trace_ref,        # out (1, N) int32: observed turn at acquisition
     acc_ref,          # out (1, 1) f32: affine chain value
     state_ref,        # scratch SMEM (2,) int32: [ticket, turn]
+    *,
+    interpret: bool,
 ):
     i = pl.program_id(0)
     n_pad = grant_ref.shape[1]
@@ -61,9 +67,20 @@ def ticket_lock_kernel(
     my_ticket = state_ref[0]
     state_ref[0] = my_ticket + 1
 
-    # ... then sleep-wait until turn == ticket (bounded poll).
-    def cond(polls):
-        return (state_ref[1] != my_ticket) & (polls < 1_000_000)
+    # ... then sleep-wait until turn == ticket (bounded poll). Under
+    # interpret mode the turn word is read once before the loop: on a
+    # sequential core it cannot change while we poll, and jax<0.5
+    # interpret mode cannot discharge a ref read inside while_loop. On
+    # hardware the cond re-reads the turn word every iteration — the
+    # volatile poll that observes remote updates.
+    if interpret:
+        turn_now = state_ref[1]
+
+        def cond(polls):
+            return (turn_now != my_ticket) & (polls < 1_000_000)
+    else:
+        def cond(polls):
+            return (state_ref[1] != my_ticket) & (polls < 1_000_000)
 
     def body(polls):
         return polls + 1
@@ -102,7 +119,7 @@ def ticket_lock_pallas(
 
     row_i = pl.BlockSpec((1, n_pad), lambda i: (0, 0))
     grant, trace, acc = pl.pallas_call(
-        ticket_lock_kernel,
+        functools.partial(ticket_lock_kernel, interpret=interpret),
         grid=(n,),
         in_specs=[row_i, row_i, row_i],
         out_specs=(row_i, row_i, pl.BlockSpec(memory_space=pltpu.SMEM)),
@@ -112,7 +129,7 @@ def ticket_lock_pallas(
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ),
         scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

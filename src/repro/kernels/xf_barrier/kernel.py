@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _row_iota(n: int) -> jax.Array:
     return jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
@@ -56,6 +58,7 @@ def xf_barrier_kernel(
     straggler_ref,      # (1, N) int32: required slots that never arrived
     *,
     n_valid: int,
+    interpret: bool,
 ):
     i = pl.program_id(0)
     n = pl.num_programs(0)
@@ -79,22 +82,38 @@ def xf_barrier_kernel(
     def _master():
         checked = (iota < n_valid) & (required_ref[...] > 0)
 
+        # The "GPU sleeping" poll. Under interpret mode the flag block is
+        # read once before the loop: on a sequential core the present
+        # flags are already set before the master's grid step, and
+        # jax<0.5 interpret mode cannot discharge a ref read inside
+        # while_loop — the bounded loop only spends the poll budget on
+        # timeout, preserving the barrier-with-timeout shape. On
+        # hardware the body re-reads the flag block every iteration —
+        # the volatile re-read that observes remote DMA flag updates.
+        max_polls = max_polls_ref[0]
+
         def all_arrived():
-            return jnp.all(jnp.where(checked, arrive_ref[...] >= epoch, True))
+            return jnp.all(jnp.where(checked, arrive_ref[...] >= epoch,
+                                     True))
 
         def cond(state):
             polls, arrived = state
-            return jnp.logical_not(arrived) & (polls < max_polls_ref[0])
+            return jnp.logical_not(arrived) & (polls < max_polls)
 
-        def body(state):
-            polls, _ = state
-            # Volatile re-read of the flag block each poll iteration — the
-            # "GPU sleeping" loop. On a sequential core the present flags
-            # are already set and this exits on the first check; across
-            # cores the re-read is what observes remote DMA flag updates.
-            return polls + 1, all_arrived()
+        if interpret:
+            arrived0 = all_arrived()
 
-        _, arrived = jax.lax.while_loop(cond, body, (jnp.int32(0), all_arrived()))
+            def body(state):
+                polls, _ = state
+                return polls + 1, arrived0
+        else:
+            arrived0 = all_arrived()
+
+            def body(state):
+                polls, _ = state
+                return polls + 1, all_arrived()
+
+        _, arrived = jax.lax.while_loop(cond, body, (jnp.int32(0), arrived0))
         done_ref[0, 0] = arrived.astype(jnp.int32)
         straggler_ref[...] = jnp.where(
             checked & (arrive_ref[...] < epoch), 1, 0)
@@ -121,7 +140,8 @@ def xf_barrier_pallas(
     def prep(x):
         return jnp.pad(x.astype(jnp.int32), (0, pad)).reshape(1, n_pad)
 
-    kernel = functools.partial(xf_barrier_kernel, n_valid=n)
+    kernel = functools.partial(xf_barrier_kernel, n_valid=n,
+                               interpret=interpret)
     out_shapes = (
         jax.ShapeDtypeStruct((1, n_pad), jnp.int32),  # arrive'
         jax.ShapeDtypeStruct((1, n_pad), jnp.int32),  # release
@@ -141,7 +161,7 @@ def xf_barrier_pallas(
         ],
         out_specs=(row, row, pl.BlockSpec(memory_space=pltpu.SMEM), row),
         out_shape=out_shapes,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

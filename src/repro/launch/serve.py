@@ -1,12 +1,16 @@
-"""Serving driver: batched generation behind semaphore admission control.
+"""Serving driver: slot-pool continuous batching behind semaphore admission.
 
-Demonstrates the full serving path on a reduced config: an engine replica
-with a KV-cache concurrency budget, the paper's sleeping-semaphore
-admission controller gating requests FIFO-fairly, and the continuous
-batcher recycling slots.
+Drives the full serving path on a reduced config: one engine replica with
+a preallocated K-slot KV arena, the paper's Algorithm-5 sleeping
+semaphore as the admission gate, the Pallas semaphore kernel replanning
+the grant timeline every scheduler round, and one fixed-shape batched
+decode dispatch per round.
 
   python -m repro.launch.serve --arch qwen3-14b --smoke \
       --requests 32 --capacity 8 --new-tokens 16
+
+``--legacy`` runs the old per-request Python decode loop on the same
+workload for comparison.
 """
 
 from __future__ import annotations
@@ -20,8 +24,57 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import build_model
-from repro.serve.engine import ServeEngine
-from repro.serve.scheduler import ContinuousBatcher, Request, plan_admission
+from repro.serve.engine import ServeEngine, SlotServeEngine
+from repro.serve.scheduler import plan_admission
+
+
+def build(args):
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    if cfg.is_encdec or cfg.frontend is not None:
+        raise SystemExit("serve.py drives token-LM archs")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    return cfg, model, params
+
+
+def run_slot_engine(model, params, prompts, args, arrivals_steps=None):
+    """Serve all requests through the slot engine. ``arrivals_steps``
+    staggers submissions on the decode-step clock (None = burst at 0)."""
+    n = len(prompts)
+    max_len = args.prompt_len + args.new_tokens + 1
+    engine = SlotServeEngine(
+        model, params, capacity=args.capacity, max_len=max_len,
+        decode_chunk=args.decode_chunk, seed=args.seed)
+    arrivals = (np.zeros(n) if arrivals_steps is None
+                else np.asarray(arrivals_steps))
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < n or engine.queue or engine.active:
+        while nxt < n and arrivals[nxt] <= engine.step_clock:
+            engine.submit(prompts[nxt], args.new_tokens)
+            nxt += 1
+        if engine.step() == 0 and not engine.queue and nxt < n:
+            # idle tick: nothing in flight, next arrival in the future
+            engine.step_clock += 1
+    dt = time.perf_counter() - t0
+    return engine, dt
+
+
+def run_legacy_loop(model, params, prompts, args):
+    """Old path: per-request prefill + Python decode loop, sequential."""
+    max_len = args.prompt_len + args.new_tokens + 1
+    engine = ServeEngine(model, params, max_len=max_len)
+    t0 = time.perf_counter()
+    waits, tokens = [], 0
+    for prompt in prompts:
+        waits.append(time.perf_counter() - t0)
+        out = engine.generate({"tokens": jnp.asarray(prompt)[None, :]},
+                              args.new_tokens)
+        tokens += int(out.tokens.shape[0] * out.tokens.shape[1])
+    dt = time.perf_counter() - t0
+    return tokens, dt, np.asarray(waits)
 
 
 def main(argv=None):
@@ -32,65 +85,46 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--decode-chunk", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="also run the old per-request loop")
     args = ap.parse_args(argv)
 
-    cfg = get_arch(args.arch)
-    if args.smoke:
-        cfg = cfg.reduced()
-    if cfg.is_encdec or cfg.frontend is not None:
-        raise SystemExit("serve.py drives token-LM archs")
-
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.new_tokens + 1
-    engine = ServeEngine(model, params, max_len=max_len)
-
-    # Slot-state per active request (reduced demo: one cache per request;
-    # a production replica uses one batched cache + slot indices).
+    cfg, model, params = build(args)
     key = jax.random.PRNGKey(args.seed)
-    prompts = jax.random.randint(
-        key, (args.requests, args.prompt_len), 0, cfg.vocab_size)
+    prompts = np.asarray(jax.random.randint(
+        key, (args.requests, args.prompt_len), 0, cfg.vocab_size))
 
-    # --- admission plan (paper Algorithm 5 as the planning kernel)
+    # --- predicted timeline (paper Algorithm 5 as the planning kernel)
     service_est = np.full(args.requests, float(args.new_tokens), np.float32)
-    arrivals = np.arange(args.requests, dtype=np.float32) * 0.1
+    arrivals = np.zeros(args.requests, np.float32)
     plan = plan_admission(arrivals, service_est, args.capacity)
-    print(f"[serve] admission plan: p50 wait {plan.p50_wait:.1f} "
+    print(f"[serve] plan: p50 wait {plan.p50_wait:.1f} steps "
           f"p99 {plan.p99_wait:.1f} makespan {plan.makespan:.1f} "
           f"queued {int(plan.waited.sum())}/{args.requests}")
 
-    caches = {}
-    steps_done = {}
-    outputs = {r: [] for r in range(args.requests)}
+    engine, dt = run_slot_engine(model, params, prompts, args)
+    st = engine.stats()
+    print(f"[serve] slot engine: {int(st['finished'])} requests, "
+          f"{int(st['tokens'])} tokens in {dt:.2f}s "
+          f"({st['tokens'] / dt:,.0f} tok/s), "
+          f"{int(st['decode_dispatches'])} dispatches, "
+          f"p50 wait {st['p50_wait_steps']:.0f} steps "
+          f"p99 {st['p99_wait_steps']:.0f}")
+    fifo_ok = engine.grant_log == sorted(engine.grant_log)
+    print(f"[serve] FIFO grant order: {'OK' if fifo_ok else 'VIOLATED'} "
+          f"({len(engine.grant_log)} grants, semaphore in-flight "
+          f"{engine.admission.in_flight})")
 
-    def decode_batch(rids):
-        finished = []
-        for rid in rids:  # reduced demo decodes per-slot; jit caches by shape
-            logits, cache = engine._decode(params, caches[rid],
-                                           outputs[rid][-1])
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            caches[rid] = cache
-            outputs[rid].append(tok)
-            steps_done[rid] += 1
-            finished.append(steps_done[rid] >= args.new_tokens)
-        return finished
-
-    batcher = ContinuousBatcher(args.capacity, decode_batch)
-    t0 = time.time()
-    for rid in range(args.requests):
-        logits, cache = engine.prefill({"tokens": prompts[rid: rid + 1]})
-        caches[rid] = cache
-        outputs[rid] = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
-        steps_done[rid] = 0
-        batcher.submit(Request(rid=rid, prompt_len=args.prompt_len,
-                               max_new_tokens=args.new_tokens))
-    ticks = batcher.drain()
-    dt = time.time() - t0
-    total_tokens = sum(len(v) for v in outputs.values())
-    print(f"[serve] {args.requests} requests, {total_tokens} tokens in "
-          f"{dt:.1f}s ({total_tokens / dt:,.0f} tok/s), {ticks} ticks, "
-          f"finished {len(batcher.finished)}")
+    if args.legacy:
+        tokens, dt_old, waits = run_legacy_loop(model, params, prompts, args)
+        print(f"[serve] legacy loop: {tokens} tokens in {dt_old:.2f}s "
+              f"({tokens / dt_old:,.0f} tok/s), "
+              f"p50 wait {np.median(waits):.2f}s "
+              f"p99 {np.percentile(waits, 99):.2f}s")
+        print(f"[serve] slot-engine speedup: {dt_old / dt:.2f}x")
+    return engine
 
 
 if __name__ == "__main__":

@@ -68,21 +68,38 @@ def block_forward(p, x, cfg, kind: str, use_moe: bool, positions,
 def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
                  ) -> Tuple[jax.Array, Dict]:
     """One-token pass. x [B,1,D]; cache entry as built by block_forward
-    (k/v padded to max length for attention layers)."""
+    (k/v padded to max length for attention layers).
+
+    ``cache_len`` is either a scalar (whole-batch decode, the legacy
+    engine) or an ``[B]`` vector of per-row lengths (slot-pool serving:
+    every row is an independent request at its own depth). Vector rows
+    whose length is out of range (retired slots) drop their cache write.
+    """
+    cl = jnp.asarray(cache_len)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind == "mamba":
         y, state = mb.mamba_decode_step(
             p["mixer"], h, (cache["conv"], cache["h"]), cfg)
         new_cache = {"conv": state[0], "h": state[1]}
     else:
-        positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+        if cl.ndim == 1:
+            positions = cl[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.full((x.shape[0], 1), cl, jnp.int32)
         q, k, v = attn.qkv_project(p["mixer"], cfg, h, positions)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        if cl.ndim == 1:
+            rows = jnp.arange(x.shape[0])
+            k_cache = cache["k"].at[rows, cl].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            v_cache = cache["v"].at[rows, cl].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
         y = attn.cached_decode_attention(
-            p["mixer"], cfg, q, k_cache, v_cache, cache_len + 1,
+            p["mixer"], cfg, q, k_cache, v_cache, cl + 1,
             window=_window_for(cfg, kind))
         y = attn.attention_out(p["mixer"], y, cfg.num_heads)
         new_cache = {"k": k_cache, "v": v_cache}

@@ -116,14 +116,23 @@ class EncDecLM:
             y = attn.full_attention(p["self_attn"], cfg, q, k, v,
                                     causal=True, window=None)
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                self_cache["k"], k.astype(self_cache["k"].dtype),
-                cache_len, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                self_cache["v"], v.astype(self_cache["v"].dtype),
-                cache_len, axis=1)
+            cl = jnp.asarray(cache_len)
+            if cl.ndim == 1:
+                # per-row lengths (slot-pool serving passthrough)
+                rows = jnp.arange(x.shape[0])
+                kc = self_cache["k"].at[rows, cl].set(
+                    k[:, 0].astype(self_cache["k"].dtype), mode="drop")
+                vc = self_cache["v"].at[rows, cl].set(
+                    v[:, 0].astype(self_cache["v"].dtype), mode="drop")
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    self_cache["k"], k.astype(self_cache["k"].dtype),
+                    cache_len, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    self_cache["v"], v.astype(self_cache["v"].dtype),
+                    cache_len, axis=1)
             y = attn.cached_decode_attention(
-                p["self_attn"], cfg, q, kc, vc, cache_len + 1, window=None)
+                p["self_attn"], cfg, q, kc, vc, cl + 1, window=None)
             new_cache = {"k": kc, "v": vc}
         x = x + attn.attention_out(p["self_attn"], y, cfg.num_heads)
 
@@ -226,7 +235,11 @@ class EncDecLM:
         cfg = self.cfg
         cache_len = cache["len"]
         x = constrain_batch(embed(params["embed"], token[:, None]).astype(cfg.dtype))
-        positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+        cl = jnp.asarray(cache_len)
+        if cl.ndim == 1:
+            positions = cl[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
 
         def body(x, scanned):
             p, cross_k, cross_v, sk, sv = scanned

@@ -207,16 +207,33 @@ class LM:
         return loss, metrics
 
     # ------------------------------------------------------------- serving
-    def prefill(self, params, batch, *, max_len: Optional[int] = None
+    def prefill(self, params, batch, *, max_len: Optional[int] = None,
+                length: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, PyTree]:
-        """Run the prompt, build the cache. Returns (last_logits, cache)."""
+        """Run the prompt, build the cache. Returns (last_logits, cache).
+
+        ``length`` ([B] int32) marks per-row true prompt lengths when the
+        prompts are right-padded to a fixed shape (slot-pool serving):
+        logits come from position ``length - 1`` and ``cache["len"]`` is
+        the per-row vector, so decode attends only to real tokens (pad
+        K/V beyond ``length`` is masked out by the decode path). Only
+        valid for attention layers — a Mamba/hybrid prefill is recurrent
+        and must be run at the exact prompt length instead.
+        """
         cfg = self.cfg
         x, cache, _ = self._backbone(params, batch, want_cache=True)
-        logits = self._unembed(params, x[:, -1:, :])
         s = (batch["tokens"] if cfg.frontend is None else batch["embeds"]).shape[1]
+        if length is None:
+            logits = self._unembed(params, x[:, -1:, :])[:, 0]
+            ln = jnp.asarray(s, jnp.int32)
+        else:
+            ln = jnp.asarray(length, jnp.int32)
+            rows = jnp.arange(x.shape[0])
+            x_last = x[rows, jnp.clip(ln - 1, 0, s - 1)]       # [B, D]
+            logits = self._unembed(params, x_last[:, None, :])[:, 0]
         cache = self._pad_cache(cache, s, max_len or s)
-        cache["len"] = jnp.asarray(s, jnp.int32)
-        return logits[:, 0], cache
+        cache["len"] = ln
+        return logits, cache
 
     def _pad_cache(self, cache, s: int, max_len: int):
         def pad_kv(leaf_path_free):  # pad k/v time axis to max_len

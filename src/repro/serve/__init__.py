@@ -1,2 +1,16 @@
-# Serving substrate: prefill/decode engine + semaphore-based continuous
-# batching admission (the paper's Algorithm-5 discipline).
+# Serving substrate: slot-pool KV arena + batched decode engine +
+# semaphore-based continuous-batching admission (the paper's Algorithm-5
+# discipline on the hot serving loop).
+from repro.serve.engine import (  # noqa: F401
+    GenerationResult,
+    ServeEngine,
+    ServeRequest,
+    SlotServeEngine,
+)
+from repro.serve.kv_slots import SlotPool  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    AdmissionController,
+    ContinuousBatcher,
+    Request,
+    plan_admission,
+)

@@ -1,12 +1,44 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop."""
+"""Serving engines: legacy per-request loop + slot-based continuous batching.
+
+``ServeEngine`` is the original per-request Python decode loop (kept as
+the baseline that ``benchmarks/servebench.py`` measures against and for
+single-stream generation). ``SlotServeEngine`` is the production path:
+
+  * a preallocated ``[K, max_len, ...]`` KV arena (serve/kv_slots.py) —
+    K is the replica's concurrency budget;
+  * one jitted fixed-shape batched ``decode_step`` over all K slots per
+    iteration, with a ``lax.scan`` inner loop decoding ``decode_chunk``
+    tokens per dispatch and finished/vacant rows masked (they still
+    compute, at fixed shape, but their tokens are frozen and their cache
+    writes drop once out of range);
+  * admission driven by the paper's Algorithm-5 sleeping semaphore at
+    *both* layers: the host ``AdmissionController`` (a real
+    ``SleepingSemaphore``) is the occupancy gate on the hot loop, and the
+    Pallas ``kernels/semaphore`` timeline — replanned each scheduler
+    round over in-flight holds + queued arrivals through a fixed planning
+    window — decides which queued requests join the next decode
+    iteration (a queued request is admitted iff the kernel grants it
+    with ``waited == 0`` *now*). FIFO grant order is the semaphore's
+    fairness guarantee, and the engine records it in ``grant_log`` so
+    callers can verify it.
+
+The engine owns cache layout: models just read/write the arena row they
+are handed (per-slot ``len`` vectors; models/blocks.block_decode).
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.semaphore.ops import semaphore_admission_window
+from repro.serve.kv_slots import SlotPool
+from repro.serve.scheduler import AdmissionController
 
 PyTree = Any
 
@@ -18,7 +50,8 @@ class GenerationResult:
 
 
 class ServeEngine:
-    """Wraps a model with jitted prefill/decode and a sampling loop."""
+    """Legacy engine: wraps a model with jitted prefill/decode and a
+    per-request Python sampling loop (no slot reuse, no admission)."""
 
     def __init__(self, model, params, *, max_len: int = 256,
                  temperature: float = 0.0):
@@ -58,3 +91,311 @@ class ServeEngine:
             if eos_id is not None and bool(jnp.all(done)):
                 break
         return GenerationResult(tokens=jnp.stack(outs, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Slot-based continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One request's lifecycle through the slot engine (all step-clock
+    timestamps are in decode-step units; *_s are wall-clock seconds)."""
+    rid: int
+    prompt: np.ndarray                 # [L] int32 token ids
+    max_new_tokens: int
+    arrival_step: int = 0
+    arrival_s: float = 0.0
+    grant_step: int = -1
+    grant_s: float = 0.0
+    finish_step: int = -1
+    finish_s: float = 0.0
+    slot: int = -1
+    eos: bool = False
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def wait_steps(self) -> int:
+        return self.grant_step - self.arrival_step
+
+    @property
+    def wait_s(self) -> float:
+        return self.grant_s - self.arrival_s
+
+
+class SlotServeEngine:
+    """Continuous-batching engine over a fixed KV slot arena.
+
+    Drive it with ``submit`` + ``run_until_done``, or ``step`` manually
+    from an outer serving loop. Decoder-only token LMs only (the slot
+    pool itself also handles encoder-decoder caches; wiring an encdec
+    front-end is an open roadmap item).
+    """
+
+    def __init__(self, model, params, *, capacity: int, max_len: int,
+                 temperature: float = 0.0, decode_chunk: int = 1,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 pad_prompts_to: Optional[int] = None,
+                 use_admission_kernel: bool = True,
+                 plan_window: int = 64):
+        cfg = model.cfg
+        if cfg.is_encdec or cfg.frontend is not None:
+            raise ValueError("SlotServeEngine drives decoder-only token LMs")
+        if capacity < 1 or decode_chunk < 1:
+            raise ValueError("capacity and decode_chunk must be >= 1")
+        self.model = model
+        self.params = params
+        self.capacity = capacity
+        self.max_len = max_len
+        self.temperature = temperature
+        self.decode_chunk = decode_chunk
+        self.eos_id = eos_id
+        self.pad_prompts_to = pad_prompts_to
+        self.use_admission_kernel = use_admission_kernel
+        # the planning trace holds all K in-flight requests plus the
+        # queued front; a window smaller than capacity would silently
+        # cap effective concurrency at the window
+        self.plan_window = max(plan_window, 2 * capacity)
+        # Right-padded prompt buckets are only sound for attention layers
+        # (causal masking hides the pad); Mamba prefill is recurrent, so
+        # hybrid/SSM archs prefill at exact prompt length (retrace per
+        # distinct length — workloads bucket their own prompts).
+        self._can_pad = "mamba" not in cfg.layer_pattern
+
+        self.pool = SlotPool(model, capacity, max_len)
+        self.admission = AdmissionController(capacity)
+        self.queue: List[ServeRequest] = []
+        self.active: Dict[int, ServeRequest] = {}      # slot -> request
+        self.finished: List[ServeRequest] = []
+        self.grant_log: List[int] = []                 # rids in grant order
+        self.step_clock = 0
+        self.decode_dispatches = 0
+
+        self._next_rid = 0
+        self._last_tok = np.zeros(capacity, np.int32)
+        self._steps_left = np.zeros(capacity, np.int64)
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._chunk = jax.jit(self._chunk_impl, static_argnames=("steps",))
+
+    # ------------------------------------------------------------ jitted fns
+    def _prefill_impl(self, params, tokens, length):
+        batch = {"tokens": tokens}
+        if length is None:
+            logits, cache = self.model.prefill(
+                params, batch, max_len=self.max_len)
+        else:
+            logits, cache = self.model.prefill(
+                params, batch, max_len=self.max_len, length=length)
+        return logits, cache
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature).astype(jnp.int32)
+
+    def _chunk_impl(self, params, cache, last_tok, frozen, key, *, steps):
+        """``steps`` batched decode iterations under one dispatch.
+
+        frozen rows (vacant slots / already-finished requests) keep
+        emitting their last token; their cache rows are scratch until the
+        slot is reused. Hitting eos freezes a row for the rest of the
+        chunk so over-generation past eos never reaches the caller.
+        """
+        eos = self.eos_id
+
+        def body(carry, key_s):
+            cache, tok, frozen = carry
+            logits, cache = self.model.decode_step(params, cache, tok)
+            nxt = self._sample(logits, key_s)
+            nxt = jnp.where(frozen, tok, nxt)
+            if eos is not None:
+                frozen = frozen | (nxt == eos)
+            return (cache, nxt, frozen), nxt
+
+        keys = jax.random.split(key, steps)
+        (cache, tok, frozen), toks = jax.lax.scan(
+            body, (cache, last_tok, frozen), keys)
+        return cache, tok, toks                        # toks [steps, K]
+
+    # ------------------------------------------------------------ submission
+    def submit(self, prompt, max_new_tokens: int,
+               rid: Optional[int] = None) -> ServeRequest:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new_tokens + 1 > self.max_len:
+            raise ValueError(
+                f"prompt({prompt.size}) + max_new({max_new_tokens}) "
+                f"exceeds slot max_len({self.max_len})")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = ServeRequest(rid=rid, prompt=prompt,
+                           max_new_tokens=max_new_tokens,
+                           arrival_step=self.step_clock,
+                           arrival_s=time.perf_counter())
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------- admission
+    def _planned_admit_count(self) -> int:
+        """How many FIFO-front queued requests the Algorithm-5 timeline
+        grants *now*, given current in-flight holds. The kernel's
+        ``waited == 0`` bit (under-capacity ⇒ immediate entry) is the
+        admission decision."""
+        n_queued = len(self.queue)
+        if n_queued == 0:
+            return 0
+        if not self.use_admission_kernel:
+            return min(self.pool.n_free, n_queued)
+        now = float(self.step_clock)
+        act = sorted(self.active)                      # slot order
+        arr = ([now] * len(act)
+               + [now + 1e-3 * (i + 1) for i in range(n_queued)])
+        hold = ([float(max(self._steps_left[s], 1)) for s in act]
+                + [float(r.max_new_tokens) for r in self.queue])
+        n_plan = min(len(arr), self.plan_window)
+        _, _, waited = semaphore_admission_window(
+            np.asarray(arr[:n_plan], np.float32),
+            np.asarray(hold[:n_plan], np.float32),
+            capacity=self.capacity, window=self.plan_window)
+        waited_q = waited[len(act):]
+        # FIFO prefix of queued requests granted without waiting
+        n_admit = 0
+        for w in waited_q:
+            if w:
+                break
+            n_admit += 1
+        return n_admit
+
+    def _bucket_len(self, n: int) -> int:
+        if not self._can_pad:
+            return n
+        if self.pad_prompts_to is not None:
+            b = max(self.pad_prompts_to, n)
+        else:
+            b = 8
+            while b < n:
+                b *= 2
+        # never pad past the arena row — the prompt itself fits by the
+        # submit() check, and _pad_cache cannot pad to less than s
+        return min(b, self.max_len)
+
+    def _admit(self) -> int:
+        n_admit = self._planned_admit_count()
+        admitted = 0
+        while admitted < n_admit and self.queue and self.pool.n_free:
+            req = self.queue.pop(0)
+            # Algorithm-5 wait(): never blocks here because the kernel
+            # only granted as many requests as there are free slots —
+            # the planner and the gate agree by construction.
+            if not self.admission.acquire_slot(timeout=5.0):
+                self.queue.insert(0, req)
+                break
+            slot = self.pool.acquire(req.rid)
+            lp = int(req.prompt.size)
+            bucket = self._bucket_len(lp)
+            padded = np.zeros(bucket, np.int32)
+            padded[:lp] = req.prompt
+            length = (jnp.asarray([lp], jnp.int32)
+                      if bucket != lp else None)
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(padded)[None, :], length)
+            self._key, sub = jax.random.split(self._key)
+            tok0 = int(self._sample(logits, sub)[0])
+            self.pool.insert(slot, cache, lp)
+            self._last_tok[slot] = tok0
+            self._steps_left[slot] = req.max_new_tokens - 1
+            req.slot = slot
+            req.grant_step = self.step_clock
+            req.grant_s = time.perf_counter()
+            req.out_tokens.append(tok0)
+            if self.eos_id is not None and tok0 == self.eos_id:
+                req.eos = True
+            self.active[slot] = req
+            self.grant_log.append(req.rid)
+            admitted += 1
+            if req.eos or self._steps_left[slot] <= 0:
+                self._retire(slot, offset=0)
+        return admitted
+
+    def _retire(self, slot: int, offset: int) -> None:
+        req = self.active.pop(slot)
+        req.finish_step = self.step_clock + offset
+        req.finish_s = time.perf_counter()
+        self._steps_left[slot] = 0
+        self.pool.evict(slot)
+        self.admission.release_slot()
+        self.finished.append(req)
+
+    # ------------------------------------------------------------ decode loop
+    def step(self) -> int:
+        """One scheduler round: admit per the kernel plan, then one
+        fixed-shape decode dispatch of ``decode_chunk`` tokens. Returns
+        the number of still-active requests."""
+        self._admit()
+        if not self.active:
+            return 0
+        steps = self.decode_chunk
+        frozen = np.ones(self.capacity, bool)
+        for slot in self.active:
+            frozen[slot] = False
+        self._key, sub = jax.random.split(self._key)
+        cache, tok, toks = self._chunk(
+            self.params, self.pool.cache_view(),
+            jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
+            steps=steps)
+        self.decode_dispatches += 1
+        lens = cache.pop("len")
+        self.pool.arena = cache
+        self.pool.set_lens(lens)
+        self._last_tok = np.array(tok)     # writable copy (inserts mutate)
+        toks = np.asarray(toks)                        # [steps, K]
+
+        for slot in list(self.active):
+            req = self.active[slot]
+            done_at = None
+            for s in range(steps):
+                if self._steps_left[slot] <= 0:
+                    break
+                t = int(toks[s, slot])
+                req.out_tokens.append(t)
+                self._steps_left[slot] -= 1
+                if self.eos_id is not None and t == self.eos_id:
+                    req.eos = True
+                    done_at = s + 1
+                    break
+                if self._steps_left[slot] <= 0:
+                    done_at = s + 1
+            if done_at is not None:
+                self._retire(slot, offset=done_at)
+        self.step_clock += steps
+        return len(self.active)
+
+    def run_until_done(self, max_rounds: int = 1_000_000) -> int:
+        """Drain queue + active set. Returns scheduler rounds used."""
+        rounds = 0
+        while (self.queue or self.active) and rounds < max_rounds:
+            self.step()
+            rounds += 1
+        return rounds
+
+    # -------------------------------------------------------------- reporting
+    def stats(self) -> Dict[str, float]:
+        fin = self.finished
+        waits = np.asarray([r.wait_steps for r in fin], np.float32)
+        waits_s = np.asarray([r.wait_s for r in fin], np.float32)
+        toks = int(sum(len(r.out_tokens) for r in fin))
+        return {
+            "finished": float(len(fin)),
+            "tokens": float(toks),
+            "decode_dispatches": float(self.decode_dispatches),
+            "p50_wait_steps": float(np.median(waits)) if len(fin) else 0.0,
+            "p99_wait_steps": (float(np.percentile(waits, 99))
+                               if len(fin) else 0.0),
+            "p50_wait_s": float(np.median(waits_s)) if len(fin) else 0.0,
+            "p99_wait_s": (float(np.percentile(waits_s, 99))
+                           if len(fin) else 0.0),
+            "semaphore_admitted": float(self.admission.admitted),
+            "semaphore_completed": float(self.admission.completed),
+        }

@@ -95,16 +95,35 @@ class AdmissionController:
         self.admitted = 0
         self.completed = 0
 
-    def run_request(self, work: Callable[[], None],
-                    timeout: Optional[float] = None) -> bool:
+    def acquire_slot(self, timeout: Optional[float] = None) -> bool:
+        """Algorithm-5 wait(): blocks (FIFO-fairly) until a slot is free.
+
+        The slot engine calls this on its admission hot path — one
+        fetch-and-add when under capacity, ticket + handoff when over —
+        so the semaphore count is the ground truth for slot occupancy.
+        """
         if not self._sem.wait(timeout=timeout):
             return False
         self.admitted += 1
+        return True
+
+    def release_slot(self) -> None:
+        """Algorithm-5 post(): hand the slot to the oldest waiter."""
+        self.completed += 1
+        self._sem.post()
+
+    @property
+    def in_flight(self) -> int:
+        return self.admitted - self.completed
+
+    def run_request(self, work: Callable[[], None],
+                    timeout: Optional[float] = None) -> bool:
+        if not self.acquire_slot(timeout=timeout):
+            return False
         try:
             work()
         finally:
-            self.completed += 1
-            self._sem.post()
+            self.release_slot()
         return True
 
 

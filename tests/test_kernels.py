@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional in this image (tests/_hypothesis_compat.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.kernels.membench.ops import make_buffer, membench
 from repro.kernels.membench.ref import membench_ref

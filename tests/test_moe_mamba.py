@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional in this image (tests/_hypothesis_compat.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_arch
 from repro.configs.base import ArchConfig, MoEConfig, SSMConfig

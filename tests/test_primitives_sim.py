@@ -5,7 +5,10 @@ fairness) are property-tested with hypothesis over machine/concurrency.
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional in this image (tests/_hypothesis_compat.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.abstraction import FERMI, TESLA
 from repro.core.primitives_sim import (BackoffConfig, run_primitive)
