@@ -7,14 +7,24 @@ the paper compares:
   Figure 2 (mutex):     spin, spin+backoff, FA(+backoff)
   Figure 3 (semaphore): spin, spin+backoff, sleeping x initial value
 
-plus the 'Host' row measured with real threads (hostbench), and the
-Table-5 best-implementation auto-selection check.
+plus the 'Host' row measured with real threads (hostbench), the Table-5
+best-implementation auto-selection check, and the per-primitive
+per-backend plan latency of the unified ``repro.sync`` surface (host
+threading vs Pallas-interpret kernel vs pure-jnp ref).
+
+``--smoke`` runs the backend-latency + selection sections only and
+writes ``BENCH_primitives.json`` so CI records the primitives' perf
+trajectory alongside ``BENCH_serve.json``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List
+from typing import Dict, List, Tuple
+
+import numpy as np
 
 from repro.core.abstraction import (FERMI, TESLA, PrimitiveKind, classify,
                                     select_impl)
@@ -151,6 +161,48 @@ def headline_speedups(ops: int = 20) -> List[str]:
     return rows
 
 
+def backend_latency_rows(
+    *, n: int = 12, capacity: int = 3, repeats: int = 3,
+    backends: Tuple[str, ...] = ("host", "kernel", "ref"),
+) -> Tuple[List[str], Dict[str, Dict[str, float]]]:
+    """Per-primitive per-backend plan latency of the unified sync API.
+
+    The kernel/ref numbers are the post-compile hot-path cost the serving
+    scheduler pays per replanning round; the host number is the cost of
+    an *observed execution* with real threads (the equivalence oracle,
+    never on a hot loop)."""
+    from repro.sync import SyncLibrary
+    lib = SyncLibrary.host_default()
+    rng = np.random.default_rng(0)
+    arrivals = np.sort(rng.uniform(0, 3, n)).astype(np.float32)
+    holds = rng.uniform(1, 3, n).astype(np.float32)
+    arrival_perm = rng.permutation(n).astype(np.int32)
+    present = np.ones(n, np.int64)
+
+    plans = {
+        "semaphore": lambda be: lib.plan_semaphore(
+            arrivals, holds, capacity, backend=be),
+        "mutex": lambda be: lib.plan_mutex(arrival_perm, backend=be),
+        "barrier": lambda be: lib.plan_barrier(
+            present, epoch=1, backend=be),
+    }
+    rows: List[str] = []
+    data: Dict[str, Dict[str, float]] = {}
+    for prim, plan in plans.items():
+        data[prim] = {}
+        for be in backends:
+            plan(be)  # warm (compile for the jitted backends)
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                plan(be)
+                times.append((time.perf_counter() - t0) * 1e6)
+            us = float(np.median(times))
+            data[prim][be] = us
+            rows.append(f"sync_{prim}_{be},{us:.1f},n={n};plan_latency")
+    return rows, data
+
+
 def main(fast: bool = True) -> List[str]:
     blocks_t = TESLA_BLOCKS if not fast else (1, 30, 120, 240)
     blocks_f = FERMI_BLOCKS if not fast else (1, 32, 128)
@@ -158,9 +210,36 @@ def main(fast: bool = True) -> List[str]:
     rows += sweep(FERMI, "fermi", blocks_f)
     rows += table5_check()
     rows += headline_speedups()
+    rows += backend_latency_rows()[0]
+    return rows
+
+
+def smoke(out: str) -> List[str]:
+    """CI tier: backend latencies + selection check -> JSON artifact."""
+    rows, backends = backend_latency_rows()
+    t5 = table5_check()
+    rows += t5
+    blob = {
+        "backends_plan_latency_us": backends,
+        "table5": t5[0].split(",", 2)[2],
+        "machine_classes": t5[1].split(",", 2)[2],
+    }
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=2)
+    rows.append(f"# wrote {out}")
     return rows
 
 
 if __name__ == "__main__":
-    for r in main(fast=False):
-        print(r)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="backend-latency + selection sections only; "
+                         "write the JSON artifact")
+    ap.add_argument("--out", default="BENCH_primitives.json")
+    args = ap.parse_args()
+    if args.smoke:
+        for r in smoke(args.out):
+            print(r)
+    else:
+        for r in main(fast=False):
+            print(r)

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core.abstraction import FERMI, TESLA, PrimitiveKind, select_impl
-from repro.core.api import SyncLibrary
+from repro.sync import SyncLibrary
 from repro.core.primitives_sim import run_primitive
 from repro.models import build_model, make_batch
 from repro.configs.base import ShapeConfig
@@ -22,7 +22,8 @@ def sync_primitives_demo():
         for prim in PrimitiveKind:
             choice = select_impl(machine, prim, semaphore_initial=10)
             print(f"  {machine.name:14s} {prim.value:9s} -> "
-                  f"{choice.algorithm:13s} ({choice.strategy.value})")
+                  f"{choice.algorithm:13s} ({choice.strategy.value}) "
+                  f"on backend {choice.backend}")
 
     print("\n== simulated ops/sec at 64 blocks (Tesla abstraction)")
     for impl in ("spin", "fa"):

@@ -1,34 +1,50 @@
-"""The paper's contribution, end to end:
+"""The paper's contribution through the unified ``repro.sync`` API:
 
   1. classify machines via the 12-benchmark machine abstraction
-     (simulated Tesla/Fermi + this host, measured);
-  2. reproduce the headline comparisons (Figures 1-3);
-  3. run the paper-derived control plane: an XF barrier detecting a
+     (simulated Tesla/Fermi + this host, measured once and cached) and
+     show the (backend, algorithm, wait-strategy) selection triples;
+  2. reproduce the headline comparisons (Figure 2);
+  3. plan the *same* primitive trace on three backends — real host
+     threads, the Pallas interpret kernel, the pure-jnp oracle — and
+     check they agree (the library's portability claim, live);
+  4. run the paper-derived control plane: an XF barrier detecting a
      straggler, FIFO ticket-mutex membership, semaphore admission.
 
     PYTHONPATH=src python examples/sync_primitives.py
 """
 
 import threading
-import time
 
 import numpy as np
 
-from repro.core.abstraction import FERMI, TESLA, classify
+from repro.core.abstraction import FERMI, TESLA, TPU_V5E, PrimitiveKind, classify
 from repro.core.coordinator import ClusterCoordinator
-from repro.core.hostbench_probe import classify_host
 from repro.core.primitives_sim import run_primitive
 from repro.serve.scheduler import plan_admission
+from repro.sync import SyncLibrary
 
 
 def classify_machines():
     print("== machine abstraction (P1 atomic:volatile, P2 contention, P3 hostage)")
-    host = classify_host(threads=4, accesses=4000)
-    for m in (TESLA, FERMI, host):
+    # for_host() probes once per process per probe-parameter set
+    # (cached; refresh=True re-probes)
+    host_lib = SyncLibrary.for_host(threads=4, accesses=4000)
+    assert (SyncLibrary.for_host(threads=4, accesses=4000).machine
+            is host_lib.machine)  # cache hit
+    for m in (TESLA, FERMI, host_lib.machine):
         s = m.summary()
         print(f"  {m.name:14s} P1={s['P1_atomic_volatile_ratio']:6.1f} "
               f"P2={s['P2_contention_ratio']:5.2f} "
               f"P3={int(s['P3_line_hostage'])}  class={classify(m)}")
+
+    print("\n== selection triples (backend, algorithm, wait strategy)")
+    for machine in (TESLA, FERMI, TPU_V5E, host_lib.machine):
+        lib = SyncLibrary(machine=machine)
+        for prim in PrimitiveKind:
+            c = lib.choice(prim, semaphore_initial=10)
+            print(f"  {machine.name:14s} {prim.value:9s} -> "
+                  f"({c.backend:6s}, {c.algorithm:13s}, {c.strategy.value})")
+    return host_lib
 
 
 def reproduce_figures():
@@ -45,7 +61,23 @@ def reproduce_figures():
               f"  -> best: {best}")
 
 
-def control_plane_demo():
+def cross_backend_check(lib):
+    print("\n== one trace, three backends (host threads / Pallas kernel / ref)")
+    rng = np.random.default_rng(0)
+    arrivals = np.sort(rng.uniform(0, 3, 10)).astype(np.float32)
+    holds = rng.uniform(1, 3, 10).astype(np.float32)
+    plans = {be: lib.plan_semaphore(arrivals, holds, capacity=3, backend=be)
+             for be in ("host", "kernel", "ref")}
+    ref = plans["ref"]
+    for be, p in plans.items():
+        agree = (np.array_equal(p.grant_order, ref.grant_order)
+                 and np.allclose(p.release, ref.release, atol=1e-5))
+        print(f"  semaphore[{be:6s}] grant_order={p.grant_order.tolist()} "
+              f"queued={int(p.waited.sum())} "
+              f"{'== ref' if agree else '!= ref  <-- BUG'}")
+
+
+def control_plane_demo(lib):
     print("\n== control plane: straggler detection via XF barrier timeout")
     coord = ClusterCoordinator(world=4, barrier_timeout_s=0.5)
 
@@ -68,14 +100,16 @@ def control_plane_demo():
     print("\n== serving admission (paper Algorithm 5 as planning kernel)")
     arrivals = np.sort(np.random.default_rng(0).uniform(0, 5, 24)).astype(np.float32)
     service = np.random.default_rng(1).uniform(1, 3, 24).astype(np.float32)
-    plan = plan_admission(arrivals, service, capacity=6)
-    print(f"  24 requests, capacity 6: p50 wait {plan.p50_wait:.2f}s, "
+    plan = plan_admission(arrivals, service, capacity=6, lib=lib)
+    print(f"  24 requests, capacity 6 [{plan.backend}]: "
+          f"p50 wait {plan.p50_wait:.2f}s, "
           f"p99 {plan.p99_wait:.2f}s, makespan {plan.makespan:.1f}s, "
           f"queued {int(plan.waited.sum())}")
 
 
 if __name__ == "__main__":
-    classify_machines()
+    host_lib = classify_machines()
     reproduce_figures()
-    control_plane_demo()
+    cross_backend_check(host_lib)
+    control_plane_demo(host_lib)
     print("\nsync_primitives demo done.")

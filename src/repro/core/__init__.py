@@ -22,6 +22,7 @@ from repro.core.abstraction import (  # noqa: F401
     PrimitiveKind,
     WaitStrategy,
     classify,
+    select_backend,
     select_impl,
 )
 from repro.core.memsim import MemSim, run_membench  # noqa: F401

@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
+from typing import Optional
 
 
 class WaitStrategy(enum.Enum):
@@ -200,6 +201,24 @@ class ImplChoice:
     algorithm: str       # e.g. "xf", "fa", "spin", "spin_backoff", "sleeping"
     strategy: WaitStrategy
     rationale: str
+    backend: str = "host"  # execution substrate: host | kernel | tpu | ref
+
+
+def select_backend(machine: MachineAbstraction) -> str:
+    """Pick the execution backend for a machine abstraction (DESIGN.md §8).
+
+    No-atomics accelerators run the Pallas kernels on hardware ("tpu");
+    measured hosts run the threading implementations ("host"); simulated
+    GPU abstractions plan through the interpret-mode kernels ("kernel").
+    The registry in ``repro.sync.backends`` maps these names to
+    implementations; plans on a live-only backend fall back to the
+    interpret kernel (see ``SyncLibrary.planning_backend_name``).
+    """
+    if not machine.has_atomics:
+        return "tpu"
+    if machine.name.startswith("host"):
+        return "host"
+    return "kernel"
 
 
 def select_impl(
@@ -208,13 +227,30 @@ def select_impl(
     *,
     semaphore_initial: int = 1,
     expected_contention: float = 1.0,
+    backend: Optional[str] = None,
 ) -> ImplChoice:
-    """Reproduce paper Table 5 from the abstraction parameters.
+    """Reproduce paper Table 5 from the abstraction parameters, extended
+    to a full (backend, algorithm, wait-strategy) selection triple.
 
     ``expected_contention`` in [0,1]: fraction of participants expected to
     contend simultaneously; low contention relaxes toward cheaper spin ops
-    (paper Section 6, last paragraph).
+    (paper Section 6, last paragraph). ``backend`` pins the execution
+    substrate; ``None`` derives it from the machine via
+    ``select_backend``.
     """
+    choice = _select_algorithm(machine, primitive, semaphore_initial,
+                               expected_contention)
+    return dataclasses.replace(
+        choice, backend=backend if backend is not None
+        else select_backend(machine))
+
+
+def _select_algorithm(
+    machine: MachineAbstraction,
+    primitive: PrimitiveKind,
+    semaphore_initial: int,
+    expected_contention: float,
+) -> ImplChoice:
     cls = classify(machine)
 
     if primitive is PrimitiveKind.BARRIER:

@@ -1,89 +1,24 @@
-"""Unified synchronization API (paper Table 4 + Section 5 "API").
+"""DEPRECATED shim — the unified sync API moved to ``repro.sync``.
 
-The paper's library exposes Barrier/Mutex/Semaphore with the best
-implementation for the platform chosen by default, while still letting the
-user pin a specific one. ``SyncLibrary`` does the same, driven by the
-machine abstraction:
+This module used to hold the host-only ``SyncLibrary``; the redesigned
+library (backend registry over host / Pallas-interpret / TPU / pure-jnp
+reference substrates, live + ``plan(trace)`` call forms) lives in
+``repro.sync``. Import from there in new code:
 
-    lib = SyncLibrary.for_host()            # classify this host, pick impls
-    m = lib.mutex()                          # best mutex for the machine
-    s = lib.semaphore(8)                     # best semaphore
-    b = lib.barrier(parties=16)              # XF barrier (best everywhere)
+    from repro.sync import SyncLibrary
 
-    lib = SyncLibrary(machine=FERMI)         # or pin a machine abstraction
-    lib.mutex(kind="spin_backoff")           # or pin an implementation
+The old entry points below keep working: ``SyncLibrary`` is the new
+class (a strict superset — ``SyncLibrary(machine=FERMI)``,
+``for_host()``, ``mutex()/semaphore()/barrier()``, ``choice()`` all
+behave as before, with ``for_host()`` now cached per process), and the
+private algorithm tables are re-exported from the host backend.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
-from . import hostsync
-from .abstraction import (
-    FERMI,
-    TESLA,
-    ImplChoice,
-    MachineAbstraction,
-    PrimitiveKind,
-    WaitStrategy,
-    classify,
-    select_impl,
+from repro.sync import SyncLibrary  # noqa: F401
+from repro.sync.backends import (  # noqa: F401
+    HOST_BARRIERS as _BARRIERS,
+    HOST_MUTEXES as _MUTEXES,
+    HOST_SEMAPHORES as _SEMAPHORES,
 )
-
-# Map (primitive, algorithm) -> hostsync implementation. The host can also
-# truly block, so "auto" on a host machine may pick the futex, which the
-# paper identifies as CPU-only (no blocking on the GPU).
-_MUTEXES = {
-    "spin": lambda strat: hostsync.SpinMutex(strategy=WaitStrategy.SPIN),
-    "spin_backoff": lambda strat: hostsync.SpinMutex(strategy=WaitStrategy.SPIN_BACKOFF),
-    "fa": lambda strat: hostsync.TicketMutex(strategy=strat),
-    "futex": lambda strat: hostsync.FutexMutex(),
-}
-_SEMAPHORES = {
-    "spin": lambda n, strat: hostsync.SpinSemaphore(n, strategy=WaitStrategy.SPIN),
-    "spin_backoff": lambda n, strat: hostsync.SpinSemaphore(n, strategy=WaitStrategy.SPIN_BACKOFF),
-    "sleeping": lambda n, strat: hostsync.SleepingSemaphore(n, strategy=strat),
-}
-_BARRIERS = {
-    "xf": lambda p, strat: hostsync.XFBarrier(p, strategy=strat),
-    "atomic": lambda p, strat: hostsync.CentralizedBarrier(p, strategy=strat),
-    "centralized": lambda p, strat: hostsync.CentralizedBarrier(p, strategy=strat),
-}
-
-
-@dataclasses.dataclass
-class SyncLibrary:
-    machine: MachineAbstraction
-
-    @classmethod
-    def for_host(cls) -> "SyncLibrary":
-        from .hostbench_probe import classify_host  # lazy: runs a measurement
-        return cls(machine=classify_host())
-
-    # ------------------------------------------------------------ selection
-    def choice(self, primitive: PrimitiveKind, **kw) -> ImplChoice:
-        return select_impl(self.machine, primitive, **kw)
-
-    def machine_class(self) -> str:
-        return classify(self.machine)
-
-    # --------------------------------------------------------- constructors
-    def mutex(self, kind: Optional[str] = None):
-        if kind is None:
-            kind = self.choice(PrimitiveKind.MUTEX).algorithm
-        strat = self.choice(PrimitiveKind.MUTEX).strategy
-        return _MUTEXES[kind](strat)
-
-    def semaphore(self, initial: int, kind: Optional[str] = None):
-        if kind is None:
-            kind = self.choice(
-                PrimitiveKind.SEMAPHORE, semaphore_initial=initial).algorithm
-        strat = self.choice(PrimitiveKind.SEMAPHORE).strategy
-        return _SEMAPHORES[kind](initial, strat)
-
-    def barrier(self, parties: int, kind: Optional[str] = None):
-        if kind is None:
-            kind = self.choice(PrimitiveKind.BARRIER).algorithm
-        strat = self.choice(PrimitiveKind.BARRIER).strategy
-        return _BARRIERS[kind](parties, strat)

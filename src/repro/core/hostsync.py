@@ -320,16 +320,27 @@ class XFBarrier:
     write is to the writer's own word — no atomics anywhere). Participant 0
     is the master: it scans arrive flags and then broadcasts release flags.
     Reusable across epochs without re-zeroing.
+
+    ``required`` mirrors the Pallas kernel's membership mask
+    (`kernels/xf_barrier`): the master only waits for required ranks, so
+    an evicted participant stops blocking the barrier without resizing it.
+    Default: everyone is required.
     """
 
     def __init__(self, parties: int,
-                 strategy: WaitStrategy = WaitStrategy.SPIN_BACKOFF):
+                 strategy: WaitStrategy = WaitStrategy.SPIN_BACKOFF,
+                 required: Optional[Sequence[bool]] = None):
         if parties < 1:
             raise ValueError("parties must be >= 1")
+        if required is not None and len(required) != parties:
+            raise ValueError("required mask must have one entry per party")
         self.parties = parties
         self._arrive: List[int] = [0] * parties
         self._release: List[int] = [0] * parties
         self._epochs: List[int] = [0] * parties  # per-participant epoch
+        self._required: List[bool] = (
+            [True] * parties if required is None
+            else [bool(r) for r in required])
         self._strategy = strategy
 
     def arrive_and_wait(self, rank: int,
@@ -340,7 +351,8 @@ class XFBarrier:
         bo = Backoff(1, 16)
         if rank == 0:
             ok = _wait(
-                lambda: all(a >= epoch for a in self._arrive),
+                lambda: all(a >= epoch for a, req
+                            in zip(self._arrive, self._required) if req),
                 self._strategy, bo, timeout,
             )
             if not ok:
@@ -352,10 +364,12 @@ class XFBarrier:
                      self._strategy, bo, timeout)
 
     def waiting_on(self, rank_epoch: Optional[int] = None) -> List[int]:
-        """Ranks that have not yet arrived at the master's current epoch —
-        the straggler set the coordinator reports."""
+        """Required ranks that have not yet arrived at the master's
+        current epoch — the straggler set the coordinator reports."""
         epoch = rank_epoch if rank_epoch is not None else self._epochs[0]
-        return [i for i, a in enumerate(self._arrive) if a < epoch]
+        return [i for i, (a, req)
+                in enumerate(zip(self._arrive, self._required))
+                if req and a < epoch]
 
 
 class CentralizedBarrier:

@@ -10,8 +10,25 @@
 #                   K-server FIFO admission planning (used by serving)
 #   membench/     — the paper's Section-3 memory benchmarks adapted to TPU
 #                   HBM access patterns (contentious/noncontentious x r/w)
+#
+# Each family also ships a *_window variant (fixed-shape, power-of-2
+# bucketed padding via repro.sync.window.WindowedPlanner) for schedulers
+# that replan varying-length traces every round. The preferred consumer
+# surface is repro.sync.SyncLibrary, which routes to these through the
+# backend registry ("kernel" = interpret, "tpu" = hardware, "ref" = the
+# oracles).
 
 from repro.kernels.membench.ops import membench  # noqa: F401
-from repro.kernels.semaphore.ops import semaphore_admission  # noqa: F401
-from repro.kernels.ticket_lock.ops import ticket_lock_run  # noqa: F401
-from repro.kernels.xf_barrier.ops import fresh_flags, xf_barrier  # noqa: F401
+from repro.kernels.semaphore.ops import (  # noqa: F401
+    semaphore_admission,
+    semaphore_admission_window,
+)
+from repro.kernels.ticket_lock.ops import (  # noqa: F401
+    ticket_lock_run,
+    ticket_lock_window,
+)
+from repro.kernels.xf_barrier.ops import (  # noqa: F401
+    fresh_flags,
+    xf_barrier,
+    xf_barrier_window,
+)

@@ -7,6 +7,8 @@ import functools
 import jax
 import numpy as np
 
+from repro.sync.window import WindowedPlanner
+
 from .kernel import sleeping_semaphore_pallas
 from .ref import sleeping_semaphore_ref
 
@@ -27,6 +29,22 @@ def semaphore_admission(arrive_t, hold, *, capacity: int,
     return sleeping_semaphore_ref(arrive_t, hold, capacity)
 
 
+def _pad_admission(arrays, n: int, window: int):
+    """Pad with far-future zero-hold arrivals: they keep the arrival sort
+    ascending and can never steal a slot from a real request before it is
+    granted."""
+    arrive_t, hold = arrays
+    horizon = (float(arrive_t.max()) if n else 0.0) + 1e6
+    pad_arr = horizon + np.arange(window - n, dtype=np.float32)
+    return (np.concatenate([arrive_t, pad_arr]),
+            np.concatenate([hold, np.zeros(window - n, np.float32)]))
+
+
+_admission_window = WindowedPlanner(
+    plan=semaphore_admission, pad=_pad_admission,
+    base_window=32, name="semaphore_admission_window")
+
+
 def semaphore_admission_window(arrive_t, hold, *, capacity: int,
                                window: int = 32, interpret: bool = True,
                                use_kernel: bool = True):
@@ -35,26 +53,16 @@ def semaphore_admission_window(arrive_t, hold, *, capacity: int,
     ``semaphore_admission`` compiles per input length; the slot engine
     replans admission every scheduler round with a varying number of
     in-flight + queued requests, which would retrace the kernel each
-    round. This wrapper pads the trace to a fixed ``window`` with
-    far-future zero-hold arrivals (they keep the arrival sort ascending
-    and can never steal a slot from a real request before it is granted)
-    so one compiled kernel serves every round, then slices the padding
-    back off. Traces longer than the window raise — callers pick the
-    window from their capacity + queue bound.
+    round. This wrapper (a ``repro.sync.window.WindowedPlanner``) pads
+    the trace to a fixed ``window`` and slices the padding back off, so
+    one compiled kernel serves every round. Bursts longer than the window
+    bucket up to the next power-of-2 multiple — a bounded set of traced
+    shapes — with a one-time warning instead of failing the hot loop.
 
     Returns numpy ``(grant, release, waited)`` of the original length.
     """
     arrive_t = np.asarray(arrive_t, np.float32)
     hold = np.asarray(hold, np.float32)
-    n = arrive_t.shape[0]
-    if n > window:
-        raise ValueError(f"admission trace ({n}) exceeds planning "
-                         f"window ({window})")
-    horizon = (float(arrive_t.max()) if n else 0.0) + 1e6
-    pad_arr = horizon + np.arange(window - n, dtype=np.float32)
-    a = np.concatenate([arrive_t, pad_arr])
-    h = np.concatenate([hold, np.zeros(window - n, np.float32)])
-    grant, release, waited = semaphore_admission(
-        a, h, capacity=capacity, interpret=interpret, use_kernel=use_kernel)
-    return (np.asarray(grant)[:n], np.asarray(release)[:n],
-            np.asarray(waited)[:n])
+    return _admission_window(arrive_t, hold, window=window,
+                             capacity=capacity, interpret=interpret,
+                             use_kernel=use_kernel)

@@ -5,6 +5,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import numpy as np
+
+from repro.sync.window import WindowedPlanner
 
 from .kernel import ticket_lock_pallas
 from .ref import ticket_lock_ref
@@ -18,3 +21,38 @@ def ticket_lock_run(arrival, m, b, *, interpret: bool = True,
     if use_kernel:
         return ticket_lock_pallas(arrival, m, b, interpret=interpret)
     return ticket_lock_ref(arrival, m, b)
+
+
+def _pad_ticket(arrays, n: int, window: int):
+    """Pad with identity requesters arriving last: ids n..window-1 take
+    the trailing tickets (real grants stay in the first n positions) and
+    m=1, b=0 leaves the affine chain untouched."""
+    arrival, m, b = arrays
+    pad = window - n
+    return (np.concatenate([arrival, np.arange(n, window, dtype=np.int32)]),
+            np.concatenate([m, np.ones(pad, np.float32)]),
+            np.concatenate([b, np.zeros(pad, np.float32)]))
+
+
+_ticket_window = WindowedPlanner(
+    plan=ticket_lock_run, pad=_pad_ticket,
+    base_window=32, name="ticket_lock_window")
+
+
+def ticket_lock_window(arrival, m=None, b=None, *, window: int = 32,
+                       interpret: bool = True, use_kernel: bool = True):
+    """Fixed-shape ticket-lock planning (power-of-2 bucketed windows —
+    see ``repro.sync.window.WindowedPlanner``), so schedulers replanning
+    varying request counts reuse one compiled kernel per bucket.
+
+    Returns numpy ``(grant_order, turn_trace, acc)`` of the original
+    length.
+    """
+    arrival = np.asarray(arrival, np.int32)
+    n = arrival.shape[0]
+    m = (np.ones(n, np.float32) if m is None
+         else np.asarray(m, np.float32))
+    b = (np.zeros(n, np.float32) if b is None
+         else np.asarray(b, np.float32))
+    return _ticket_window(arrival, m, b, window=window,
+                          interpret=interpret, use_kernel=use_kernel)

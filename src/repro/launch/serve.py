@@ -10,7 +10,12 @@ decode dispatch per round.
       --requests 32 --capacity 8 --new-tokens 16
 
 ``--legacy`` runs the old per-request Python decode loop on the same
-workload for comparison.
+workload for comparison. The sync substrate is a CLI knob:
+``--sync-backend`` picks the admission planner's backend (interpret
+kernel / TPU hardware / pure-jnp ref) and ``--admission-sem`` the live
+gate's algorithm (the paper's sleeping FA semaphore vs the spin
+baselines) — both flow into the engine through one injected
+``SyncLibrary``.
 """
 
 from __future__ import annotations
@@ -23,9 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core.abstraction import PrimitiveKind
 from repro.models import build_model
 from repro.serve.engine import ServeEngine, SlotServeEngine
 from repro.serve.scheduler import plan_admission
+from repro.sync import SyncLibrary
 
 
 def build(args):
@@ -39,14 +46,24 @@ def build(args):
     return cfg, model, params
 
 
-def run_slot_engine(model, params, prompts, args, arrivals_steps=None):
+def make_sync_library(args) -> SyncLibrary:
+    """One SyncLibrary from the CLI knobs; injected everywhere."""
+    return SyncLibrary.host_default(
+        backend=None if args.sync_backend == "auto" else args.sync_backend,
+        semaphore_kind=(None if args.admission_sem == "auto"
+                        else args.admission_sem))
+
+
+def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
+                    sync=None):
     """Serve all requests through the slot engine. ``arrivals_steps``
     staggers submissions on the decode-step clock (None = burst at 0)."""
     n = len(prompts)
     max_len = args.prompt_len + args.new_tokens + 1
     engine = SlotServeEngine(
         model, params, capacity=args.capacity, max_len=max_len,
-        decode_chunk=args.decode_chunk, seed=args.seed)
+        decode_chunk=args.decode_chunk, seed=args.seed,
+        sync=sync if sync is not None else make_sync_library(args))
     arrivals = (np.zeros(n) if arrivals_steps is None
                 else np.asarray(arrivals_steps))
     t0 = time.perf_counter()
@@ -89,9 +106,26 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="also run the old per-request loop")
+    ap.add_argument("--sync-backend", default="auto",
+                    choices=("auto", "host", "kernel", "tpu", "ref"),
+                    help="admission-planner backend (auto = pick from "
+                         "the machine abstraction)")
+    ap.add_argument("--admission-sem", default="auto",
+                    choices=("auto", "sleeping", "spin", "spin_backoff"),
+                    help="live admission-gate semaphore algorithm "
+                         "(auto = paper Table-5 selection)")
     args = ap.parse_args(argv)
 
     cfg, model, params = build(args)
+    sync = make_sync_library(args)
+    choice = sync.choice(PrimitiveKind.SEMAPHORE,
+                         semaphore_initial=args.capacity)
+    gate = (choice.algorithm if args.admission_sem == "auto"
+            else args.admission_sem)
+    print(f"[serve] sync: gate={gate} (selected "
+          f"{choice.algorithm}/{choice.strategy.value}) "
+          f"planner={sync.planning_backend_name()} "
+          f"machine={sync.machine.name}({sync.machine_class()})")
     key = jax.random.PRNGKey(args.seed)
     prompts = np.asarray(jax.random.randint(
         key, (args.requests, args.prompt_len), 0, cfg.vocab_size))
@@ -99,12 +133,12 @@ def main(argv=None):
     # --- predicted timeline (paper Algorithm 5 as the planning kernel)
     service_est = np.full(args.requests, float(args.new_tokens), np.float32)
     arrivals = np.zeros(args.requests, np.float32)
-    plan = plan_admission(arrivals, service_est, args.capacity)
-    print(f"[serve] plan: p50 wait {plan.p50_wait:.1f} steps "
+    plan = plan_admission(arrivals, service_est, args.capacity, lib=sync)
+    print(f"[serve] plan[{plan.backend}]: p50 wait {plan.p50_wait:.1f} steps "
           f"p99 {plan.p99_wait:.1f} makespan {plan.makespan:.1f} "
           f"queued {int(plan.waited.sum())}/{args.requests}")
 
-    engine, dt = run_slot_engine(model, params, prompts, args)
+    engine, dt = run_slot_engine(model, params, prompts, args, sync=sync)
     st = engine.stats()
     print(f"[serve] slot engine: {int(st['finished'])} requests, "
           f"{int(st['tokens'])} tokens in {dt:.2f}s "

@@ -11,16 +11,22 @@ single-stream generation). ``SlotServeEngine`` is the production path:
     tokens per dispatch and finished/vacant rows masked (they still
     compute, at fixed shape, but their tokens are frozen and their cache
     writes drop once out of range);
-  * admission driven by the paper's Algorithm-5 sleeping semaphore at
-    *both* layers: the host ``AdmissionController`` (a real
-    ``SleepingSemaphore``) is the occupancy gate on the hot loop, and the
-    Pallas ``kernels/semaphore`` timeline — replanned each scheduler
-    round over in-flight holds + queued arrivals through a fixed planning
-    window — decides which queued requests join the next decode
-    iteration (a queued request is admitted iff the kernel grants it
-    with ``waited == 0`` *now*). FIFO grant order is the semaphore's
-    fairness guarantee, and the engine records it in ``grant_log`` so
-    callers can verify it.
+  * admission driven by the paper's Algorithm-5 semaphore discipline at
+    *both* layers: the host ``AdmissionController`` (a live semaphore
+    from the injected ``SyncLibrary`` — sleeping by default, spin via the
+    library's ``semaphore_kind`` pin) is the occupancy gate on the hot
+    loop, and the library's windowed admission planner — replanned each
+    scheduler round over in-flight holds + queued arrivals through a
+    fixed planning window — decides which queued requests join the next
+    decode iteration (a queued request is admitted iff the timeline
+    grants it with ``waited == 0`` *now*). FIFO grant order is the
+    semaphore's fairness guarantee, and the engine records it in
+    ``grant_log`` so callers can verify it.
+
+All primitive access goes through the injected ``SyncLibrary`` (the
+``sync`` constructor argument): the planner backend (interpret kernel /
+hardware / pure-jnp ref) and the live gate's algorithm are configuration
+— ``launch/serve.py`` exposes both as CLI flags.
 
 The engine owns cache layout: models just read/write the arena row they
 are handed (per-slot ``len`` vectors; models/blocks.block_decode).
@@ -36,9 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.semaphore.ops import semaphore_admission_window
 from repro.serve.kv_slots import SlotPool
 from repro.serve.scheduler import AdmissionController
+from repro.sync import SyncLibrary
 
 PyTree = Any
 
@@ -137,7 +143,8 @@ class SlotServeEngine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  pad_prompts_to: Optional[int] = None,
                  use_admission_kernel: bool = True,
-                 plan_window: int = 64):
+                 plan_window: int = 64,
+                 sync: Optional[SyncLibrary] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.frontend is not None:
             raise ValueError("SlotServeEngine drives decoder-only token LMs")
@@ -151,7 +158,7 @@ class SlotServeEngine:
         self.decode_chunk = decode_chunk
         self.eos_id = eos_id
         self.pad_prompts_to = pad_prompts_to
-        self.use_admission_kernel = use_admission_kernel
+        self.sync = sync if sync is not None else SyncLibrary.host_default()
         # the planning trace holds all K in-flight requests plus the
         # queued front; a window smaller than capacity would silently
         # cap effective concurrency at the window
@@ -163,7 +170,10 @@ class SlotServeEngine:
         self._can_pad = "mamba" not in cfg.layer_pattern
 
         self.pool = SlotPool(model, capacity, max_len)
-        self.admission = AdmissionController(capacity)
+        self.admission = AdmissionController(capacity, lib=self.sync)
+        self._admission_planner = (
+            self.sync.semaphore_planner(capacity, window=self.plan_window)
+            if use_admission_kernel else None)
         self.queue: List[ServeRequest] = []
         self.active: Dict[int, ServeRequest] = {}      # slot -> request
         self.finished: List[ServeRequest] = []
@@ -240,13 +250,13 @@ class SlotServeEngine:
     # ------------------------------------------------------------- admission
     def _planned_admit_count(self) -> int:
         """How many FIFO-front queued requests the Algorithm-5 timeline
-        grants *now*, given current in-flight holds. The kernel's
+        grants *now*, given current in-flight holds. The planner's
         ``waited == 0`` bit (under-capacity ⇒ immediate entry) is the
         admission decision."""
         n_queued = len(self.queue)
         if n_queued == 0:
             return 0
-        if not self.use_admission_kernel:
+        if self._admission_planner is None:
             return min(self.pool.n_free, n_queued)
         now = float(self.step_clock)
         act = sorted(self.active)                      # slot order
@@ -255,10 +265,9 @@ class SlotServeEngine:
         hold = ([float(max(self._steps_left[s], 1)) for s in act]
                 + [float(r.max_new_tokens) for r in self.queue])
         n_plan = min(len(arr), self.plan_window)
-        _, _, waited = semaphore_admission_window(
+        _, _, waited = self._admission_planner(
             np.asarray(arr[:n_plan], np.float32),
-            np.asarray(hold[:n_plan], np.float32),
-            capacity=self.capacity, window=self.plan_window)
+            np.asarray(hold[:n_plan], np.float32))
         waited_q = waited[len(act):]
         # FIFO prefix of queued requests granted without waiting
         n_admit = 0

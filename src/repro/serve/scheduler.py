@@ -12,86 +12,53 @@ semaphore, and the paper's two findings drive the design:
     (kernels/semaphore) to predict grant/completion times for a queue and
     size batches ahead of time.
 
-``AdmissionController`` is the host-side gate (real SleepingSemaphore);
-``plan_admission`` is the device-side planner used for batching decisions
-and reported in benchmarks/serving.
+Every primitive is reached through an injected ``repro.sync.SyncLibrary``
+— no direct imports of hostsync or the kernel ops — so the live gate's
+algorithm (sleeping vs spin, the spin-vs-sleep admission knob) and the
+planner's backend (interpret kernel / hardware / pure-jnp ref) are
+configuration, not code. ``AdmissionController`` is the host-side gate;
+``plan_admission`` is the planner used for batching decisions and
+reported in benchmarks/serving.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Callable, Dict, List, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hostsync import SleepingSemaphore
-from repro.kernels.semaphore.ops import semaphore_admission
+from repro.sync import SemaphorePlan, SyncLibrary
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt_len: int
-    max_new_tokens: int
-    arrival_s: float = 0.0
-    done: threading.Event = dataclasses.field(
-        default_factory=threading.Event)
-    output: Optional[np.ndarray] = None
-
-
-@dataclasses.dataclass
-class AdmissionPlan:
-    arrivals: np.ndarray   # [N] request arrival times
-    grant: np.ndarray      # [N] planned admission times
-    release: np.ndarray    # [N] planned completion times
-    waited: np.ndarray     # [N] 1 if the request queues
-    capacity: int
-
-    @property
-    def wait_times(self) -> np.ndarray:
-        return self.grant - self.arrivals
-
-    @property
-    def p50_wait(self) -> float:
-        return float(np.median(self.wait_times))
-
-    @property
-    def p99_wait(self) -> float:
-        return float(np.percentile(self.wait_times, 99))
-
-    @property
-    def makespan(self) -> float:
-        return float(np.max(self.release) - np.min(self.arrivals))
+# Back-compat name: the admission plan *is* the unified semaphore plan.
+AdmissionPlan = SemaphorePlan
 
 
 def plan_admission(arrivals_s: np.ndarray, service_s: np.ndarray,
-                   capacity: int) -> AdmissionPlan:
+                   capacity: int, *,
+                   lib: Optional[SyncLibrary] = None) -> AdmissionPlan:
     """Deterministic Algorithm-5 timeline for a FIFO request queue."""
-    arrivals_s = np.asarray(arrivals_s, np.float32)
-    service_s = np.asarray(service_s, np.float32)
-    order = np.argsort(arrivals_s, kind="stable")
-    arr = jnp.asarray(arrivals_s[order])
-    hold = jnp.asarray(service_s[order])
-    grant, release, waited = semaphore_admission(arr, hold, capacity=capacity)
-    inv = np.argsort(order, kind="stable")
-    return AdmissionPlan(
-        arrivals=arrivals_s,
-        grant=np.asarray(grant)[inv],
-        release=np.asarray(release)[inv],
-        waited=np.asarray(waited)[inv],
-        capacity=capacity,
-    )
+    lib = lib if lib is not None else SyncLibrary.host_default()
+    return lib.plan_semaphore(arrivals_s, service_s, capacity,
+                              backend=lib.planning_backend_name())
 
 
 class AdmissionController:
-    """Host-side concurrency gate: FIFO-fair sleeping semaphore."""
+    """Host-side concurrency gate: FIFO-fair semaphore from the library.
 
-    def __init__(self, capacity: int):
+    The semaphore algorithm comes from the injected ``SyncLibrary``'s
+    selection (or its ``semaphore_kind`` pin / the ``kind`` override):
+    "sleeping" for the paper's Algorithm-5 FA semaphore, "spin" /
+    "spin_backoff" for the Algorithm-4 baseline.
+    """
+
+    def __init__(self, capacity: int, lib: Optional[SyncLibrary] = None,
+                 kind: Optional[str] = None):
         self.capacity = capacity
-        self._sem = SleepingSemaphore(capacity)
+        self.lib = lib if lib is not None else SyncLibrary.host_default()
+        self._sem = self.lib.semaphore(capacity, kind=kind)
+        self.kind = type(self._sem).__name__
         self.admitted = 0
         self.completed = 0
 
@@ -125,6 +92,17 @@ class AdmissionController:
         finally:
             self.release_slot()
         return True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    output: Optional[np.ndarray] = None
 
 
 class ContinuousBatcher:

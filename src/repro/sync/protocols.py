@@ -1,0 +1,137 @@
+"""Uniform primitive protocols and deterministic plan types.
+
+The paper's Section-5 library exposes Barrier/Mutex/Semaphore behind one
+API. This reproduction adds a second call form, so every primitive is
+usable two ways:
+
+* **live objects** — ``lock()/unlock()``, ``wait()/post()``,
+  ``arrive_and_wait()`` on the host control plane (the threading
+  implementations in ``core/hostsync.py``);
+* **deterministic plans** — ``plan(trace) -> *Plan`` timelines computed
+  by a backend (Pallas kernel, pure-jnp reference, or the live host
+  primitives executed under an observed event clock). FIFO fairness makes
+  these timelines deterministic, which is what lets the serving scheduler
+  use the Algorithm-5 semaphore as an admission *planner*.
+
+The ``*Plan`` dataclasses are the common result currency across backends:
+two backends agree on a trace iff their plans' grant orders / release
+timelines / straggler sets match (see ``tests/test_sync_api.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Live-object protocols (structural: hostsync classes satisfy these as-is).
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Mutex(Protocol):
+    def lock(self, timeout: Optional[float] = None) -> bool: ...
+    def unlock(self) -> None: ...
+
+
+@runtime_checkable
+class Semaphore(Protocol):
+    def wait(self, timeout: Optional[float] = None) -> bool: ...
+    def post(self) -> None: ...
+
+
+@runtime_checkable
+class Barrier(Protocol):
+    def arrive_and_wait(self, rank: int,
+                        timeout: Optional[float] = None) -> bool: ...
+
+
+# ---------------------------------------------------------------------------
+# Plan types (timeline form).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SemaphorePlan:
+    """Algorithm-5 admission timeline for a FIFO request trace.
+
+    ``order`` is only set by backends that *observe* grant order (the host
+    backend running real threads); computed backends derive it from the
+    grant times. ``grant_order`` is therefore comparable across backends.
+    """
+
+    arrivals: np.ndarray   # [N] request arrival times
+    grant: np.ndarray      # [N] grant times
+    release: np.ndarray    # [N] release times (grant + hold)
+    waited: np.ndarray     # [N] 1 if the request queued (took a ticket)
+    capacity: int
+    backend: str = ""
+    order: Optional[np.ndarray] = None  # [N] request ids in observed grant order
+
+    @property
+    def grant_order(self) -> np.ndarray:
+        """Request indices in the order they were granted."""
+        if self.order is not None:
+            return np.asarray(self.order)
+        return np.argsort(self.grant, kind="stable")
+
+    @property
+    def wait_times(self) -> np.ndarray:
+        return self.grant - self.arrivals
+
+    @property
+    def p50_wait(self) -> float:
+        return float(np.median(self.wait_times))
+
+    @property
+    def p99_wait(self) -> float:
+        return float(np.percentile(self.wait_times, 99))
+
+    @property
+    def makespan(self) -> float:
+        return float(np.max(self.release) - np.min(self.arrivals))
+
+
+@dataclasses.dataclass
+class MutexPlan:
+    """FIFO ticket-mutex timeline for a trace of lock requests."""
+
+    arrival: np.ndarray      # [N] requester ids in arrival order
+    grant_order: np.ndarray  # [N] requester id holding the lock t-th (== FIFO)
+    turn_trace: np.ndarray   # [N] turn observed at acquisition (== ticket)
+    acc: float               # order-sensitive affine chain (serialization witness)
+    backend: str = ""
+
+    @property
+    def fifo(self) -> bool:
+        return bool(np.array_equal(self.grant_order, self.arrival))
+
+
+@dataclasses.dataclass
+class BarrierPlan:
+    """One XF-barrier epoch over flag words.
+
+    ``release`` semantics on *non-required* slots are backend-specific
+    (the kernel broadcasts only to required slots, the host barrier to all
+    parties); cross-backend comparisons use ``released`` which restricts
+    to required slots.
+    """
+
+    epoch: int
+    arrive: np.ndarray       # [N] updated arrive flags
+    release: np.ndarray      # [N] release flags
+    done: int                # 1 iff all required slots arrived
+    stragglers: np.ndarray   # [N] 1 for required slots that never arrived
+    required: np.ndarray     # [N] the membership mask the master checked
+    backend: str = ""
+
+    @property
+    def straggler_ranks(self) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.stragglers))
+
+    @property
+    def released(self) -> np.ndarray:
+        """Release flags restricted to required slots (backend-comparable)."""
+        req = np.asarray(self.required) > 0
+        return np.where(req, np.asarray(self.release), 0)

@@ -1,0 +1,94 @@
+"""Shared fixed-window retrace avoidance for jitted timeline planners.
+
+Every planner in this library (``kernels/semaphore``, ``kernels/ticket_lock``,
+``kernels/xf_barrier`` and their pure-jnp references) is a jitted function
+that compiles once per input length. Schedulers call the planners every
+round with a *varying* trace length — in-flight holds plus whatever is
+queued — which would retrace the kernel each round.
+
+``WindowedPlanner`` generalizes the fixed-window trick that
+``semaphore_admission_window`` introduced for the serve hot loop: pad the
+trace to a window so one compiled kernel serves every round, then slice
+the padding back off. Instead of a hard ``ValueError`` when a burst
+exceeds the window, traces longer than the base window are bucketed to
+the next power-of-2 multiple — the set of traced shapes stays bounded
+(``base, 2*base, 4*base, ...``) — and a one-time warning records that the
+caller's window estimate was low.
+
+The padding itself is family-specific (far-future arrivals for the
+semaphore, identity requesters for the ticket lock, absent slots for the
+barrier), so each family supplies a ``pad`` callback; the bucketing,
+warning, and un-padding policy live here, shared.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Callable, Sequence, Tuple
+
+import numpy as np
+
+Arrays = Tuple[np.ndarray, ...]
+
+
+class WindowedPlanner:
+    """Pad variable-length traces to power-of-2 bucketed windows.
+
+    Parameters
+    ----------
+    plan:
+        ``plan(*padded_arrays, **static) -> tuple`` — the jitted planner.
+        Called with the padded arrays; static keyword arguments (capacity,
+        interpret flags, ...) are passed through from ``__call__``.
+    pad:
+        ``pad(arrays, n, window) -> tuple`` — family-specific padding of
+        the ``n``-length input arrays up to ``window``. Must preserve the
+        planner's semantics for the first ``n`` entries (padding must be
+        inert: it may never reorder or displace a real request).
+    base_window:
+        Default window when the caller does not pass one. The warning
+        fires the first time a trace exceeds the (per-call) base window.
+    """
+
+    def __init__(self, plan: Callable[..., Sequence], pad: Callable[[Arrays, int, int], Arrays],
+                 *, base_window: int = 32, name: str = "planner"):
+        if base_window < 1:
+            raise ValueError("base_window must be >= 1")
+        self.plan = plan
+        self.pad = pad
+        self.base_window = base_window
+        self.name = name
+        self._warned = False
+
+    def window_for(self, n: int, base: int = None) -> int:
+        """Bucketed window for an ``n``-length trace: the smallest
+        power-of-2 multiple of the base window that holds it."""
+        w = max(int(base) if base is not None else self.base_window, 1)
+        if n <= w:
+            return w
+        bucket = w
+        while bucket < n:
+            bucket *= 2
+        if not self._warned:
+            self._warned = True
+            warnings.warn(
+                f"{self.name}: trace length {n} exceeds the planning "
+                f"window {w}; bucketing to {bucket} (one retrace per "
+                f"power-of-2 bucket). Size the window from your capacity "
+                f"+ queue bound to avoid this.",
+                RuntimeWarning, stacklevel=3)
+        return bucket
+
+    def __call__(self, *arrays: np.ndarray, window: int = None, **static):
+        n = int(arrays[0].shape[0])
+        w = self.window_for(n, window)
+        padded = self.pad(tuple(arrays), n, w)
+        outs = self.plan(*padded, **static)
+        return tuple(self._unpad(o, n, w) for o in outs)
+
+    @staticmethod
+    def _unpad(out, n: int, window: int):
+        a = np.asarray(out)
+        if a.ndim >= 1 and a.shape[0] == window:
+            return a[:n]
+        return a  # scalars (acc, done) and non-windowed outputs pass through

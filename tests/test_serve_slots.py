@@ -270,7 +270,20 @@ def test_admission_window_matches_unpadded():
     np.testing.assert_allclose(gw, np.asarray(g), rtol=1e-6)
     np.testing.assert_allclose(rw, np.asarray(r), rtol=1e-6)
     np.testing.assert_array_equal(ww, np.asarray(w))
-    with pytest.raises(ValueError):
-        semaphore_admission_window(np.zeros(17, np.float32),
-                                   np.zeros(17, np.float32),
-                                   capacity=2, window=16)
+
+
+def test_admission_window_overflow_buckets_up():
+    """A burst longer than the window buckets to the next power-of-2
+    window (it used to raise ValueError on the serve hot loop) and still
+    matches the unpadded timeline."""
+    arr = np.sort(np.random.default_rng(3).uniform(0, 4, 21)
+                  ).astype(np.float32)
+    hold = np.random.default_rng(4).uniform(1, 2, 21).astype(np.float32)
+    gw, rw, ww = semaphore_admission_window(arr, hold, capacity=3,
+                                            window=16)
+    assert gw.shape == (21,)
+    g, r, w = semaphore_admission(jnp.asarray(arr), jnp.asarray(hold),
+                                  capacity=3)
+    np.testing.assert_allclose(gw, np.asarray(g), rtol=1e-6)
+    np.testing.assert_allclose(rw, np.asarray(r), rtol=1e-6)
+    np.testing.assert_array_equal(ww, np.asarray(w))

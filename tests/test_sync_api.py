@@ -1,0 +1,283 @@
+"""Backend-unified sync API: registry, selection triples, windowed
+planning, host-classification caching, and the cross-backend equivalence
+properties (host threading vs Pallas-interpret kernel vs pure-jnp ref)
+for all three primitives."""
+
+import ast
+import inspect
+import warnings
+
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional in this image (tests/_hypothesis_compat.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.abstraction import (FERMI, TESLA, TPU_V5E, PrimitiveKind,
+                                    select_backend, select_impl)
+from repro.core.hostsync import SleepingSemaphore, SpinSemaphore, XFBarrier
+from repro.sync import (SyncBackend, SyncLibrary, WindowedPlanner,
+                        available_backends, get_backend, register_backend)
+from repro.sync import library as sync_library
+
+BACKENDS = ("host", "kernel", "ref")
+
+
+@pytest.fixture
+def lib():
+    return SyncLibrary.host_default()
+
+
+# ----------------------------------------------------------------- registry
+def test_builtin_backends_registered():
+    assert set(available_backends()) >= {"host", "kernel", "tpu", "ref"}
+    assert get_backend("kernel").fast_plans
+    assert not get_backend("host").fast_plans
+    with pytest.raises(KeyError):
+        get_backend("no-such-backend")
+
+
+def test_register_custom_backend(lib):
+    class Recording(SyncBackend):
+        fast_plans = True
+
+        def plan_semaphore(self, arrivals, holds, capacity, *, window=None):
+            n = len(arrivals)
+            z = np.zeros(n, np.float32)
+            return z, z, np.zeros(n, np.int32), None
+
+    register_backend("custom-test", Recording())
+    try:
+        plan = lib.plan_semaphore([0.0, 1.0], [1.0, 1.0], 1,
+                                  backend="custom-test")
+        assert plan.backend == "custom-test"
+        # live constructors fall back to the host substrate
+        sem = get_backend("custom-test").semaphore(
+            2, "sleeping", lib.choice(PrimitiveKind.SEMAPHORE).strategy)
+        assert isinstance(sem, SleepingSemaphore)
+    finally:
+        from repro.sync.backends import _REGISTRY
+        _REGISTRY.pop("custom-test", None)
+
+
+# ---------------------------------------------------------- selection triple
+def test_selection_triple_backend_axis():
+    assert select_backend(TPU_V5E) == "tpu"
+    assert select_backend(TESLA) == "kernel"
+    assert select_backend(sync_library.HOST_NOMINAL) == "host"
+    # select_impl carries the backend in the triple, overridable
+    c = select_impl(TPU_V5E, PrimitiveKind.SEMAPHORE)
+    assert (c.backend, c.algorithm) == ("tpu", "sleeping")
+    c = select_impl(FERMI, PrimitiveKind.MUTEX, backend="ref")
+    assert (c.backend, c.algorithm) == ("ref", "spin_backoff")
+
+
+def test_library_pins_override_selection(lib):
+    spin_lib = SyncLibrary.host_default(semaphore_kind="spin")
+    assert isinstance(spin_lib.semaphore(2), SpinSemaphore)
+    assert isinstance(lib.semaphore(2), SleepingSemaphore)
+    assert isinstance(lib.barrier(3), XFBarrier)
+    tpu_lib = SyncLibrary(machine=TPU_V5E)
+    assert tpu_lib.backend_name() == "tpu"
+    # live-only fallback: plans on a pinned "host" library use the kernel
+    assert SyncLibrary.host_default(backend="host") \
+        .planning_backend_name() == "kernel"
+    assert SyncLibrary.host_default(backend="ref") \
+        .planning_backend_name() == "ref"
+
+
+# ----------------------------------------------------------- windowed plans
+def test_windowed_planner_buckets_and_warns_once():
+    planner = WindowedPlanner(
+        plan=lambda a: (a,),
+        pad=lambda arrays, n, w: (np.pad(arrays[0], (0, w - n)),),
+        base_window=8, name="test_planner")
+    assert planner.window_for(5) == 8
+    assert planner.window_for(9) == 16
+    assert planner.window_for(33) == 64
+    (out,) = planner(np.arange(6, dtype=np.float32))
+    assert out.shape == (6,)
+
+    planner2 = WindowedPlanner(
+        plan=lambda a: (a,),
+        pad=lambda arrays, n, w: (np.pad(arrays[0], (0, w - n)),),
+        base_window=4, name="warn_planner")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        planner2(np.arange(7, dtype=np.float32))
+        planner2(np.arange(9, dtype=np.float32))
+    msgs = [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    assert len(msgs) == 1  # one-time warning, not once per call
+
+
+def test_ticket_and_barrier_windowed_match_unwindowed():
+    from repro.kernels.ticket_lock.ops import (ticket_lock_run,
+                                               ticket_lock_window)
+    from repro.kernels.xf_barrier.ops import xf_barrier, xf_barrier_window
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    n = 11
+    arrival = rng.permutation(n).astype(np.int32)
+    m = rng.uniform(0.5, 1.5, n).astype(np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    gw, tw, accw = ticket_lock_window(arrival, m, b, window=8)
+    g, t, acc = ticket_lock_run(jnp.asarray(arrival), jnp.asarray(m),
+                                jnp.asarray(b))
+    np.testing.assert_array_equal(gw, np.asarray(g))
+    np.testing.assert_array_equal(tw, np.asarray(t))
+    np.testing.assert_allclose(float(accw), float(acc), rtol=2e-4)
+
+    present = (rng.uniform(size=n) < 0.7).astype(np.int32)
+    required = (rng.uniform(size=n) < 0.8).astype(np.int32)
+    flags = np.zeros(n, np.int32)
+    aw, rw, dw, sw = xf_barrier_window(flags, 1, present, required,
+                                       window=8)
+    a, r, d, s = xf_barrier(jnp.asarray(flags), jnp.int32(1),
+                            jnp.asarray(present), jnp.asarray(required))
+    np.testing.assert_array_equal(aw, np.asarray(a))
+    np.testing.assert_array_equal(rw, np.asarray(r))
+    assert int(dw) == int(d)
+    np.testing.assert_array_equal(sw, np.asarray(s))
+
+
+# ------------------------------------------------------- for_host() caching
+def test_for_host_probe_cached_with_refresh_escape(monkeypatch):
+    calls = {"n": 0}
+
+    def fake_probe(**kw):
+        calls["n"] += 1
+        return sync_library.HOST_NOMINAL
+
+    import repro.core.hostbench_probe as probe_mod
+    monkeypatch.setattr(probe_mod, "classify_host", fake_probe)
+    monkeypatch.setattr(sync_library, "_HOST_MACHINES", {})
+
+    SyncLibrary.for_host()
+    SyncLibrary.for_host()
+    SyncLibrary.for_host()
+    assert calls["n"] == 1          # probe ran once, result cached
+    SyncLibrary.for_host(refresh=True)
+    assert calls["n"] == 2          # explicit escape hatch re-probes
+    SyncLibrary.for_host(threads=2)
+    SyncLibrary.for_host(threads=2)
+    assert calls["n"] == 3          # distinct probe params, distinct entry
+
+
+# -------------------------------------------- cross-backend equivalence
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(4, 12), cap=st.integers(1, 4),
+       seed=st.integers(0, 10_000))
+def test_semaphore_plans_equivalent_across_backends(lib, n, cap, seed):
+    """Property: the real Algorithm-5 host semaphore (threads, observed),
+    the Pallas kernel, and the jnp oracle produce the same grant order,
+    waited set, and release timeline on a random trace."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.sort(rng.uniform(0, 3, n)).astype(np.float32)
+    holds = rng.uniform(1, 3, n).astype(np.float32)
+    plans = {be: lib.plan_semaphore(arrivals, holds, cap, backend=be)
+             for be in BACKENDS}
+    ref = plans["ref"]
+    for be, plan in plans.items():
+        np.testing.assert_array_equal(plan.waited, ref.waited, err_msg=be)
+        np.testing.assert_array_equal(plan.grant_order, ref.grant_order,
+                                      err_msg=be)
+        np.testing.assert_allclose(plan.grant, ref.grant, rtol=1e-5,
+                                   atol=1e-5, err_msg=be)
+        np.testing.assert_allclose(plan.release, ref.release, rtol=1e-5,
+                                   atol=1e-5, err_msg=be)
+    # occupancy never exceeds K on the shared timeline
+    g, r = ref.grant, ref.release
+    for i in range(n):
+        assert np.sum((g <= g[i] + 1e-6) & (r > g[i] + 1e-6)) <= cap
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 10_000))
+def test_mutex_plans_equivalent_across_backends(lib, n, seed):
+    """Property: real TicketMutex threads under contention grant in the
+    same FIFO order — and serialize the same order-sensitive affine
+    chain — as the kernel and the oracle."""
+    rng = np.random.default_rng(seed)
+    arrival = rng.permutation(n).astype(np.int32)
+    m = rng.uniform(0.5, 1.5, n).astype(np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    plans = {be: lib.plan_mutex(arrival, m, b, backend=be)
+             for be in BACKENDS}
+    ref = plans["ref"]
+    for be, plan in plans.items():
+        np.testing.assert_array_equal(plan.grant_order, ref.grant_order,
+                                      err_msg=be)
+        np.testing.assert_array_equal(plan.turn_trace, ref.turn_trace,
+                                      err_msg=be)
+        np.testing.assert_allclose(plan.acc, ref.acc, rtol=2e-4,
+                                   atol=1e-4, err_msg=be)
+        assert plan.fifo
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 10_000))
+def test_barrier_plans_equivalent_across_backends(lib, n, seed):
+    """Property: one XF-barrier epoch completes/stalls identically —
+    done bit, straggler bitmap, release flags on required slots — on
+    real threads, the kernel, and the oracle."""
+    rng = np.random.default_rng(seed)
+    present = (rng.uniform(size=n) < 0.8).astype(np.int64)
+    required = (rng.uniform(size=n) < 0.8).astype(np.int64)
+    plans = {be: lib.plan_barrier(present, required, epoch=1, backend=be)
+             for be in BACKENDS}
+    ref = plans["ref"]
+    expect_done = int(np.all(present[required > 0]))
+    for be, plan in plans.items():
+        assert plan.done == ref.done == expect_done, be
+        np.testing.assert_array_equal(plan.stragglers, ref.stragglers,
+                                      err_msg=be)
+        np.testing.assert_array_equal(plan.released, ref.released,
+                                      err_msg=be)
+        np.testing.assert_array_equal(
+            plan.straggler_ranks,
+            np.flatnonzero((required > 0) & (present == 0)), err_msg=be)
+
+
+# ----------------------------------------------------- serve-stack injection
+def test_serve_stack_has_no_direct_primitive_imports():
+    """Acceptance criterion: engine/scheduler reach primitives only
+    through the injected SyncLibrary."""
+    import repro.serve.engine as engine_mod
+    import repro.serve.scheduler as scheduler_mod
+    for mod in (engine_mod, scheduler_mod):
+        tree = ast.parse(inspect.getsource(mod))
+        imported = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                imported.update(a.name for a in node.names)
+            elif isinstance(node, ast.ImportFrom):
+                imported.add(node.module or "")
+        for name in imported:
+            assert "hostsync" not in name, (mod.__name__, name)
+            assert "kernels" not in name, (mod.__name__, name)
+
+
+def test_admission_controller_takes_injected_library():
+    from repro.serve.scheduler import AdmissionController
+    ctl = AdmissionController(
+        2, lib=SyncLibrary.host_default(semaphore_kind="spin"))
+    assert ctl.kind == "SpinSemaphore"
+    assert ctl.acquire_slot(timeout=1.0)
+    ctl.release_slot()
+    ctl_default = AdmissionController(2)
+    assert ctl_default.kind == "SleepingSemaphore"
+
+
+def test_plan_admission_backend_flows_through():
+    from repro.serve.scheduler import plan_admission
+    arrivals = np.arange(6, dtype=np.float32) * 0.1
+    service = np.full(6, 2.0, np.float32)
+    p_def = plan_admission(arrivals, service, capacity=2)
+    p_ref = plan_admission(arrivals, service, capacity=2,
+                           lib=SyncLibrary.host_default(backend="ref"))
+    assert p_def.backend == "kernel" and p_ref.backend == "ref"
+    np.testing.assert_allclose(p_def.grant, p_ref.grant, rtol=1e-6)
+    assert p_def.waited[:2].sum() == 0 and p_def.waited[2:].sum() == 4
