@@ -5,9 +5,13 @@ arrivals at several concurrency budgets K, for
 
   * ``legacy``  — the old per-request Python decode loop (sequential),
   * ``slots``   — the semaphore-gated continuous-batching slot engine,
+  * ``paged``   — the same engine on the block-table page arena
+    (serve/kv_pages.py): equal arena bytes, mutex-gated page
+    allocator on the admission/retire hot path,
 
 plus the Algorithm-5 kernel-planned wait percentiles for the same trace,
-so the predicted and measured timelines can be compared.
+so the predicted and measured timelines can be compared. ``--kv-layout``
+selects which engine rows to measure (CI runs both).
 
   PYTHONPATH=src python benchmarks/servebench.py --smoke
 
@@ -36,13 +40,15 @@ def poisson_arrival_steps(n: int, capacity: int, new_tokens: int,
 
 
 def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
-                      new_tokens, decode_chunk, seed):
+                      new_tokens, decode_chunk, seed, kv_layout="slots",
+                      page_size=16):
     from repro.serve.engine import SlotServeEngine
     n, prompt_len = prompts.shape
     max_len = prompt_len + new_tokens + 1
     engine = SlotServeEngine(model, params, capacity=capacity,
                              max_len=max_len, decode_chunk=decode_chunk,
-                             seed=seed)
+                             seed=seed, kv_layout=kv_layout,
+                             page_size=page_size)
     # warm the prefill/decode traces outside the timed region, then
     # reset every counter the report reads (step clock included, so the
     # arrival schedule starts at 0)
@@ -53,6 +59,10 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
     engine.decode_dispatches = 0
     engine.step_clock = 0
     engine.admission.admitted = engine.admission.completed = 0
+    if kv_layout == "paged":
+        pp = engine.pool.pages
+        pp.allocs = pp.frees = pp.peak_in_use = 0
+        pp.grant_log.clear()
 
     t0 = time.perf_counter()
     nxt = 0
@@ -65,7 +75,7 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
     dt = time.perf_counter() - t0
     st = engine.stats()
     fifo_ok = engine.grant_log == sorted(engine.grant_log)
-    return {
+    row = {
         "tokens": int(st["tokens"]),
         "wall_s": dt,
         "tok_per_s": st["tokens"] / dt,
@@ -74,6 +84,16 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
         "decode_dispatches": int(st["decode_dispatches"]),
         "fifo_ok": bool(fifo_ok),
     }
+    if kv_layout == "paged":
+        engine.pool.check()                  # leak-free after the drain
+        row.update({
+            "page_size": page_size,
+            "pages_total": int(st["pages_total"]),
+            "pages_peak_in_use": int(st["pages_peak_in_use"]),
+            "page_allocs": int(st["page_allocs"]),
+            "page_frees": int(st["page_frees"]),
+        })
+    return row
 
 
 def bench_legacy(model, params, prompts, *, new_tokens):
@@ -110,6 +130,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--decode-chunk", type=int, default=2)
+    ap.add_argument("--kv-layout", default="both",
+                    choices=("slots", "paged", "both"),
+                    help="which KV arena layout(s) to measure")
+    ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--load", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -136,40 +160,48 @@ def main(argv=None):
           f"p50_wait_s={legacy['p50_wait_s']:.2f},"
           f"p99_wait_s={legacy['p99_wait_s']:.2f}")
 
+    layouts = (("slots", "paged") if args.kv_layout == "both"
+               else (args.kv_layout,))
     rows = {"arch": cfg.name, "requests": args.requests,
             "prompt_len": args.prompt_len, "new_tokens": args.new_tokens,
             "decode_chunk": args.decode_chunk, "load": args.load,
-            "legacy": legacy, "slots": {}}
+            "page_size": args.page_size, "legacy": legacy}
+    rows.update({layout: {} for layout in layouts})
     for k in args.capacities:
         arrivals = poisson_arrival_steps(
             args.requests, k, args.new_tokens, args.load, rng)
         plan = plan_admission(arrivals.astype(np.float32),
                               np.full(args.requests, float(args.new_tokens),
                                       np.float32), k)
-        got = bench_slot_engine(
-            model, params, prompts, arrivals, capacity=k,
-            new_tokens=args.new_tokens, decode_chunk=args.decode_chunk,
-            seed=args.seed)
-        got["plan_p50_wait_steps"] = plan.p50_wait
-        got["plan_p99_wait_steps"] = plan.p99_wait
-        got["speedup_vs_legacy"] = got["tok_per_s"] / legacy["tok_per_s"]
-        rows["slots"][str(k)] = got
-        print(f"slot_engine_K{k},tok_per_s={got['tok_per_s']:.1f},"
-              f"p50_wait_steps={got['p50_wait_steps']:.1f},"
-              f"p99_wait_steps={got['p99_wait_steps']:.1f},"
-              f"plan_p50={got['plan_p50_wait_steps']:.1f},"
-              f"plan_p99={got['plan_p99_wait_steps']:.1f},"
-              f"speedup={got['speedup_vs_legacy']:.2f}x,"
-              f"fifo_ok={got['fifo_ok']}")
+        for layout in layouts:
+            got = bench_slot_engine(
+                model, params, prompts, arrivals, capacity=k,
+                new_tokens=args.new_tokens, decode_chunk=args.decode_chunk,
+                seed=args.seed, kv_layout=layout, page_size=args.page_size)
+            got["plan_p50_wait_steps"] = plan.p50_wait
+            got["plan_p99_wait_steps"] = plan.p99_wait
+            got["speedup_vs_legacy"] = got["tok_per_s"] / legacy["tok_per_s"]
+            rows[layout][str(k)] = got
+            extra = ("" if layout == "slots" else
+                     f",pages_peak={got['pages_peak_in_use']}"
+                     f"/{got['pages_total']}")
+            print(f"{layout}_engine_K{k},tok_per_s={got['tok_per_s']:.1f},"
+                  f"p50_wait_steps={got['p50_wait_steps']:.1f},"
+                  f"p99_wait_steps={got['p99_wait_steps']:.1f},"
+                  f"plan_p50={got['plan_p50_wait_steps']:.1f},"
+                  f"plan_p99={got['plan_p99_wait_steps']:.1f},"
+                  f"speedup={got['speedup_vs_legacy']:.2f}x,"
+                  f"fifo_ok={got['fifo_ok']}{extra}")
 
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)
         print(f"# wrote {args.out}")
 
-    batched = [v for kk, v in rows["slots"].items() if int(kk) > 1]
+    batched = [v for layout in layouts
+               for kk, v in rows[layout].items() if int(kk) > 1]
     if batched and not all(v["speedup_vs_legacy"] > 1.0 for v in batched):
-        print("# WARNING: slot engine not faster than legacy at batch > 1")
+        print("# WARNING: batched engine not faster than legacy at K > 1")
     return rows
 
 

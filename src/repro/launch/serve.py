@@ -10,7 +10,11 @@ decode dispatch per round.
       --requests 32 --capacity 8 --new-tokens 16
 
 ``--legacy`` runs the old per-request Python decode loop on the same
-workload for comparison. The sync substrate is a CLI knob:
+workload for comparison. ``--kv-layout paged`` swaps the contiguous slot
+arena for the block-table page arena (serve/kv_pages.py) whose
+mutex-gated allocator lets per-slot contexts exceed ``max_len`` at equal
+arena bytes; ``--page-size`` sets its granularity.
+The sync substrate is a CLI knob:
 ``--sync-backend`` picks the admission planner's backend (interpret
 kernel / TPU hardware / pure-jnp ref) and ``--admission-sem`` the live
 gate's algorithm (the paper's sleeping FA semaphore vs the spin
@@ -63,6 +67,7 @@ def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
     engine = SlotServeEngine(
         model, params, capacity=args.capacity, max_len=max_len,
         decode_chunk=args.decode_chunk, seed=args.seed,
+        kv_layout=args.kv_layout, page_size=args.page_size,
         sync=sync if sync is not None else make_sync_library(args))
     arrivals = (np.zeros(n) if arrivals_steps is None
                 else np.asarray(arrivals_steps))
@@ -103,6 +108,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--decode-chunk", type=int, default=2)
+    ap.add_argument("--kv-layout", default="slots",
+                    choices=("slots", "paged"),
+                    help="KV arena layout: contiguous [K, max_len] slots "
+                         "or the block-table page arena (equal bytes, "
+                         "per-slot contexts may exceed max_len)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="also run the old per-request loop")
@@ -140,12 +152,23 @@ def main(argv=None):
 
     engine, dt = run_slot_engine(model, params, prompts, args, sync=sync)
     st = engine.stats()
-    print(f"[serve] slot engine: {int(st['finished'])} requests, "
+    print(f"[serve] {args.kv_layout} engine: {int(st['finished'])} requests, "
           f"{int(st['tokens'])} tokens in {dt:.2f}s "
           f"({st['tokens'] / dt:,.0f} tok/s), "
           f"{int(st['decode_dispatches'])} dispatches, "
           f"p50 wait {st['p50_wait_steps']:.0f} steps "
           f"p99 {st['p99_wait_steps']:.0f}")
+    if args.kv_layout == "paged":
+        pool = engine.pool
+        print(f"[serve] page arena: {pool.pages.num_pages} pages x "
+              f"{pool.page_size} tokens, peak "
+              f"{int(st['pages_peak_in_use'])} in use, "
+              f"{int(st['page_allocs'])} allocs / "
+              f"{int(st['page_frees'])} frees under "
+              f"{type(pool.pages.mutex).__name__}"
+              f"[{pool.pages.wait_strategy.value}], "
+              f"virtual max_len {pool.virtual_max_len} "
+              f"(slot arena row: {engine.max_len})")
     fifo_ok = engine.grant_log == sorted(engine.grant_log)
     print(f"[serve] FIFO grant order: {'OK' if fifo_ok else 'VIOLATED'} "
           f"({len(engine.grant_log)} grants, semaphore in-flight "

@@ -314,6 +314,48 @@ def banded_attention(
 
 
 # ------------------------------------------------------------------ decode
+#
+# Two cache layouts reach the decode path:
+#
+#   * contiguous — one [B, T, KV, hd] row per slot (kv_slots.SlotPool);
+#   * paged      — one [num_pages, page_size, KV, hd] arena shared by all
+#     slots plus a per-row block table [B, P] of page ids
+#     (kv_pages.PagedSlotPool). ``PAGE_SENTINEL`` rows of the table are
+#     unallocated: reads clip (the garbage is masked by the length
+#     check), writes drop.
+#
+# The paged helpers keep flat position order — page j of a row covers
+# positions [j*ps, (j+1)*ps) — so the gathered view feeds the same
+# ``decode_attention`` masking as the contiguous layout.
+
+def gather_pages(arena: jax.Array, pages: jax.Array) -> jax.Array:
+    """[num_pages, ps, ...] arena + [B, P] block table -> [B, P*ps, ...]
+    per-row contiguous view. Sentinel/unallocated entries clip to the
+    last page; its contents are garbage for this row but lie beyond the
+    row's true length, so the decode mask hides them."""
+    num_pages = arena.shape[0]
+    g = jnp.take(arena, jnp.clip(pages, 0, num_pages - 1), axis=0)
+    b, np_, ps = g.shape[:3]
+    return g.reshape((b, np_ * ps) + g.shape[3:])
+
+
+def scatter_page_token(arena: jax.Array, pages: jax.Array, pos: jax.Array,
+                       val: jax.Array) -> jax.Array:
+    """Write ``val[b]`` at flat position ``pos[b]`` of row b's paged
+    cache. arena [num_pages, ps, ...]; pages [B, P]; pos [B]; val [B, ...].
+    Writes addressed past the block table or into sentinel (unallocated)
+    entries drop — the paged analogue of the contiguous layout's
+    out-of-range ``mode="drop"`` update."""
+    num_pages, ps = arena.shape[0], arena.shape[1]
+    p_cap = pages.shape[1]
+    page_idx = pos // ps
+    page = jnp.take_along_axis(
+        pages, jnp.clip(page_idx, 0, p_cap - 1)[:, None], axis=1)[:, 0]
+    # out-of-table positions (and sentinel pages >= num_pages) must miss
+    page = jnp.where((page_idx >= 0) & (page_idx < p_cap), page, num_pages)
+    return arena.at[page, pos % ps].set(val.astype(arena.dtype), mode="drop")
+
+
 def decode_attention(
     q: jax.Array,            # [B, 1, Hp, hd]
     k_cache: jax.Array,      # [B, T, Hp, hd] (pre-expanded/padded)
@@ -368,6 +410,17 @@ def cached_decode_attention(p, cfg, q, k_cache, v_cache, cache_len, *,
     ke = expand_kv(k_cache, h, pad_to=hq)
     ve = expand_kv(v_cache, h, pad_to=hq)
     return decode_attention(q, ke, ve, cache_len, window=window)
+
+
+def paged_decode_attention(p, cfg, q, k_arena, v_arena, pages, cache_len, *,
+                           window: Optional[int]) -> jax.Array:
+    """Block-table decode: gather each row's pages into a contiguous
+    [B, P*ps, KV, hd] view, then attend exactly as the contiguous layout
+    (same masking, same per-row length semantics)."""
+    kb = gather_pages(k_arena, pages)
+    vb = gather_pages(v_arena, pages)
+    return cached_decode_attention(p, cfg, q, kb, vb, cache_len,
+                                   window=window)
 
 
 def naive_reference_attention(q, k, v, *, causal, window=None):

@@ -66,7 +66,7 @@ def block_forward(p, x, cfg, kind: str, use_moe: bool, positions,
 
 
 def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
-                 ) -> Tuple[jax.Array, Dict]:
+                 pages=None) -> Tuple[jax.Array, Dict]:
     """One-token pass. x [B,1,D]; cache entry as built by block_forward
     (k/v padded to max length for attention layers).
 
@@ -74,6 +74,13 @@ def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
     engine) or an ``[B]`` vector of per-row lengths (slot-pool serving:
     every row is an independent request at its own depth). Vector rows
     whose length is out of range (retired slots) drop their cache write.
+
+    ``pages`` ([B, P] int32 block table) switches attention layers to the
+    paged layout: the cache entry's k/v are [num_pages, ps, KV, hd]
+    arenas shared by all rows, the new token scatters into row b's page
+    at flat position ``cache_len[b]``, and attention gathers the row's
+    pages back into position order (kv_pages.PagedSlotPool). Mamba state
+    has no time axis and stays slot-dense either way.
     """
     cl = jnp.asarray(cache_len)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -87,20 +94,29 @@ def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
         else:
             positions = jnp.full((x.shape[0], 1), cl, jnp.int32)
         q, k, v = attn.qkv_project(p["mixer"], cfg, h, positions)
-        if cl.ndim == 1:
-            rows = jnp.arange(x.shape[0])
-            k_cache = cache["k"].at[rows, cl].set(
-                k[:, 0].astype(cache["k"].dtype), mode="drop")
-            v_cache = cache["v"].at[rows, cl].set(
-                v[:, 0].astype(cache["v"].dtype), mode="drop")
+        if pages is not None:
+            if cl.ndim != 1:
+                raise ValueError("paged decode requires per-row [B] lens")
+            k_cache = attn.scatter_page_token(cache["k"], pages, cl, k[:, 0])
+            v_cache = attn.scatter_page_token(cache["v"], pages, cl, v[:, 0])
+            y = attn.paged_decode_attention(
+                p["mixer"], cfg, q, k_cache, v_cache, pages, cl + 1,
+                window=_window_for(cfg, kind))
         else:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
-        y = attn.cached_decode_attention(
-            p["mixer"], cfg, q, k_cache, v_cache, cl + 1,
-            window=_window_for(cfg, kind))
+            if cl.ndim == 1:
+                rows = jnp.arange(x.shape[0])
+                k_cache = cache["k"].at[rows, cl].set(
+                    k[:, 0].astype(cache["k"].dtype), mode="drop")
+                v_cache = cache["v"].at[rows, cl].set(
+                    v[:, 0].astype(cache["v"].dtype), mode="drop")
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+            y = attn.cached_decode_attention(
+                p["mixer"], cfg, q, k_cache, v_cache, cl + 1,
+                window=_window_for(cfg, kind))
         y = attn.attention_out(p["mixer"], y, cfg.num_heads)
         new_cache = {"k": k_cache, "v": v_cache}
     x = x + y

@@ -296,9 +296,16 @@ class LM:
 
     def decode_step(self, params, cache, token_or_embed
                     ) -> Tuple[jax.Array, PyTree]:
-        """One decode step. Returns (logits [B,V], new cache)."""
+        """One decode step. Returns (logits [B,V], new cache).
+
+        When the cache carries a ``"pages"`` block table ([B, P] int32,
+        from serve/kv_pages.PagedSlotPool) the attention layers run the
+        gather-based paged decode path; the table itself is engine-owned
+        and passes through unchanged.
+        """
         cfg = self.cfg
         cache_len = cache["len"]
+        pages = cache.get("pages")
         if cfg.frontend is None:
             x = embed(params["embed"], token_or_embed[:, None]).astype(cfg.dtype)
             if getattr(cfg, "scale_embeddings", False):
@@ -315,7 +322,8 @@ class LM:
             for j, (kind, use_moe) in enumerate(self.layout):
                 x, nc = blocks.block_decode(
                     period_params[f"layer_{j}"], x,
-                    period_cache[f"layer_{j}"], cache_len, cfg, kind, use_moe)
+                    period_cache[f"layer_{j}"], cache_len, cfg, kind, use_moe,
+                    pages=pages)
                 new_caches[f"layer_{j}"] = nc
             return x, new_caches
 
@@ -327,11 +335,14 @@ class LM:
             kind, use_moe = self.layout[j]
             x, nc = blocks.block_decode(
                 params["leftover"][f"layer_{j}"], x,
-                cache["leftover"][f"layer_{j}"], cache_len, cfg, kind, use_moe)
+                cache["leftover"][f"layer_{j}"], cache_len, cfg, kind, use_moe,
+                pages=pages)
             new_leftover[f"layer_{j}"] = nc
 
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = self._unembed(params, x)[:, 0]
         new_cache = {"periods": new_period_caches, "leftover": new_leftover,
                      "len": cache_len + 1}
+        if pages is not None:
+            new_cache["pages"] = pages
         return logits, new_cache

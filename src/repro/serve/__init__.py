@@ -7,10 +7,16 @@ from repro.serve.engine import (  # noqa: F401
     ServeRequest,
     SlotServeEngine,
 )
+from repro.serve.kv_pages import (  # noqa: F401
+    PagedSlotPool,
+    PagePool,
+    PagePoolExhausted,
+)
 from repro.serve.kv_slots import SlotPool  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     AdmissionController,
     ContinuousBatcher,
     Request,
+    allocator_contention,
     plan_admission,
 )

@@ -4,8 +4,12 @@
 the baseline that ``benchmarks/servebench.py`` measures against and for
 single-stream generation). ``SlotServeEngine`` is the production path:
 
-  * a preallocated ``[K, max_len, ...]`` KV arena (serve/kv_slots.py) —
-    K is the replica's concurrency budget;
+  * a preallocated KV arena — either the contiguous ``[K, max_len, ...]``
+    slot layout (serve/kv_slots.py) or, with ``kv_layout="paged"``, the
+    block-table page arena (serve/kv_pages.py): same arena bytes, but a
+    slot may grow past ``max_len`` while its neighbours are short, and
+    page allocation/reclamation on this hot loop go through the sync
+    library's ticket-lock mutex — K is the replica's concurrency budget;
   * one jitted fixed-shape batched ``decode_step`` over all K slots per
     iteration, with a ``lax.scan`` inner loop decoding ``decode_chunk``
     tokens per dispatch and finished/vacant rows masked (they still
@@ -42,8 +46,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.kv_pages import PagedSlotPool
 from repro.serve.kv_slots import SlotPool
-from repro.serve.scheduler import AdmissionController
+from repro.serve.scheduler import AdmissionController, allocator_contention
 from repro.sync import SyncLibrary
 
 PyTree = Any
@@ -144,12 +149,18 @@ class SlotServeEngine:
                  pad_prompts_to: Optional[int] = None,
                  use_admission_kernel: bool = True,
                  plan_window: int = 64,
+                 kv_layout: str = "slots",
+                 page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 max_pages_per_slot: Optional[int] = None,
                  sync: Optional[SyncLibrary] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.frontend is not None:
             raise ValueError("SlotServeEngine drives decoder-only token LMs")
         if capacity < 1 or decode_chunk < 1:
             raise ValueError("capacity and decode_chunk must be >= 1")
+        if kv_layout not in ("slots", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.model = model
         self.params = params
         self.capacity = capacity
@@ -158,6 +169,7 @@ class SlotServeEngine:
         self.decode_chunk = decode_chunk
         self.eos_id = eos_id
         self.pad_prompts_to = pad_prompts_to
+        self.kv_layout = kv_layout
         self.sync = sync if sync is not None else SyncLibrary.host_default()
         # the planning trace holds all K in-flight requests plus the
         # queued front; a window smaller than capacity would silently
@@ -169,7 +181,15 @@ class SlotServeEngine:
         # distinct length — workloads bucket their own prompts).
         self._can_pad = "mamba" not in cfg.layer_pattern
 
-        self.pool = SlotPool(model, capacity, max_len)
+        if kv_layout == "paged":
+            self.pool = PagedSlotPool(
+                model, capacity, max_len, page_size=page_size,
+                num_pages=num_pages, max_pages_per_slot=max_pages_per_slot,
+                sync=self.sync,
+                expected_contention=allocator_contention(
+                    capacity, service_steps=float(max_len)))
+        else:
+            self.pool = SlotPool(model, capacity, max_len)
         self.admission = AdmissionController(capacity, lib=self.sync)
         self._admission_planner = (
             self.sync.semaphore_planner(capacity, window=self.plan_window)
@@ -185,18 +205,22 @@ class SlotServeEngine:
         self._last_tok = np.zeros(capacity, np.int32)
         self._steps_left = np.zeros(capacity, np.int64)
         self._key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(self._prefill_impl)
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("pad_to",))
         self._chunk = jax.jit(self._chunk_impl, static_argnames=("steps",))
 
     # ------------------------------------------------------------ jitted fns
-    def _prefill_impl(self, params, tokens, length):
+    def _prefill_impl(self, params, tokens, length, *, pad_to):
+        # ``pad_to`` is the cache time extent: the full arena row for the
+        # contiguous layout (insert slices whole rows), just the prompt
+        # bucket for the paged layout (insert scatters pages).
         batch = {"tokens": tokens}
         if length is None:
             logits, cache = self.model.prefill(
-                params, batch, max_len=self.max_len)
+                params, batch, max_len=pad_to)
         else:
             logits, cache = self.model.prefill(
-                params, batch, max_len=self.max_len, length=length)
+                params, batch, max_len=pad_to, length=length)
         return logits, cache
 
     def _sample(self, logits, key):
@@ -233,10 +257,10 @@ class SlotServeEngine:
     def submit(self, prompt, max_new_tokens: int,
                rid: Optional[int] = None) -> ServeRequest:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size + max_new_tokens + 1 > self.max_len:
+        if prompt.size + max_new_tokens + 1 > self.pool.virtual_max_len:
             raise ValueError(
                 f"prompt({prompt.size}) + max_new({max_new_tokens}) "
-                f"exceeds slot max_len({self.max_len})")
+                f"exceeds slot max_len({self.pool.virtual_max_len})")
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
@@ -286,15 +310,26 @@ class SlotServeEngine:
             b = 8
             while b < n:
                 b *= 2
-        # never pad past the arena row — the prompt itself fits by the
-        # submit() check, and _pad_cache cannot pad to less than s
-        return min(b, self.max_len)
+        # never pad past what a slot can hold — the prompt itself fits by
+        # the submit() check, and _pad_cache cannot pad to less than s
+        return min(b, self.pool.virtual_max_len)
 
     def _admit(self) -> int:
         n_admit = self._planned_admit_count()
         admitted = 0
         while admitted < n_admit and self.queue and self.pool.n_free:
-            req = self.queue.pop(0)
+            req = self.queue[0]
+            lp = int(req.prompt.size)
+            bucket = self._bucket_len(lp)
+            # the paged pool reserves every page the request may ever
+            # touch at insert (so decode never allocates mid-dispatch);
+            # when the arena can't cover that, the FIFO head waits for
+            # retirements to reclaim pages — later requests do not jump it
+            reserve = max(bucket, lp + req.max_new_tokens + 1)
+            if (self.kv_layout == "paged"
+                    and not self.pool.can_reserve(reserve)):
+                break
+            self.queue.pop(0)
             # Algorithm-5 wait(): never blocks here because the kernel
             # only granted as many requests as there are free slots —
             # the planner and the gate agree by construction.
@@ -302,17 +337,16 @@ class SlotServeEngine:
                 self.queue.insert(0, req)
                 break
             slot = self.pool.acquire(req.rid)
-            lp = int(req.prompt.size)
-            bucket = self._bucket_len(lp)
             padded = np.zeros(bucket, np.int32)
             padded[:lp] = req.prompt
             length = (jnp.asarray([lp], jnp.int32)
                       if bucket != lp else None)
             logits, cache = self._prefill(
-                self.params, jnp.asarray(padded)[None, :], length)
+                self.params, jnp.asarray(padded)[None, :], length,
+                pad_to=bucket if self.kv_layout == "paged" else self.max_len)
             self._key, sub = jax.random.split(self._key)
             tok0 = int(self._sample(logits, sub)[0])
-            self.pool.insert(slot, cache, lp)
+            self.pool.insert(slot, cache, lp, reserve=reserve)
             self._last_tok[slot] = tok0
             self._steps_left[slot] = req.max_new_tokens - 1
             req.slot = slot
@@ -355,9 +389,7 @@ class SlotServeEngine:
             jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
             steps=steps)
         self.decode_dispatches += 1
-        lens = cache.pop("len")
-        self.pool.arena = cache
-        self.pool.set_lens(lens)
+        self.pool.adopt(cache)
         self._last_tok = np.array(tok)     # writable copy (inserts mutate)
         toks = np.asarray(toks)                        # [steps, K]
 
@@ -395,7 +427,7 @@ class SlotServeEngine:
         waits = np.asarray([r.wait_steps for r in fin], np.float32)
         waits_s = np.asarray([r.wait_s for r in fin], np.float32)
         toks = int(sum(len(r.out_tokens) for r in fin))
-        return {
+        out = {
             "finished": float(len(fin)),
             "tokens": float(toks),
             "decode_dispatches": float(self.decode_dispatches),
@@ -408,3 +440,12 @@ class SlotServeEngine:
             "semaphore_admitted": float(self.admission.admitted),
             "semaphore_completed": float(self.admission.completed),
         }
+        if self.kv_layout == "paged":
+            pp = self.pool.pages
+            out.update({
+                "page_allocs": float(pp.allocs),
+                "page_frees": float(pp.frees),
+                "pages_peak_in_use": float(pp.peak_in_use),
+                "pages_total": float(pp.num_pages),
+            })
+        return out

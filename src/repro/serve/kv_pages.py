@@ -1,0 +1,365 @@
+"""Paged KV arena: a page-pool allocator + a block-table slot pool.
+
+The contiguous slot arena (serve/kv_slots.py) reserves ``K * max_len``
+tokens of KV up front — every slot pays for the longest context the
+replica will ever serve. This module replaces that reservation with a
+*paged* layout (ROADMAP "Paged attention"):
+
+  * one ``[num_pages, page_size, ...]`` physical arena per cache-leaf
+    family (each attention layer's k and v), shared by all K slots;
+  * a per-slot *block table* — ``[K, max_pages_per_slot]`` int32 rows of
+    page ids, sentinel-filled past the slot's allocation — mapping flat
+    token positions to (page, offset) pairs;
+  * ``PagePool`` — the O(1) FIFO free-list allocator those tables draw
+    from. Page allocation/reclamation happen on the serve hot loop (one
+    allocator critical section per admission and per retirement), so the
+    allocator is gated by a ``repro.sync`` ticket-lock mutex — the
+    paper's Algorithm-3 FA lock: one atomic to acquire, zero to release,
+    FIFO-fair so a burst of admissions cannot starve a retirement. The
+    wait strategy comes from ``select_impl`` under the expected allocator
+    contention (DESIGN.md §9).
+
+``PagedSlotPool`` is a drop-in for ``SlotPool`` (same
+``acquire/insert/evict/cache_view/adopt/set_lens`` surface), so
+``SlotServeEngine`` switches layouts with a constructor flag. Because
+pages are granted on demand, one slot may hold a context *longer than
+the contiguous layout's max_len* at equal arena bytes, as long as its
+neighbours are short — the whole point of paging.
+
+The decode path reads the paged cache through the gather helpers in
+``models/attention.py`` (``gather_pages`` / ``scatter_page_token``); page
+``j`` of a slot covers flat positions ``[j*ps, (j+1)*ps)``, so gathered
+views stay in position order and reuse the contiguous masking.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abstraction import PrimitiveKind
+from repro.serve.kv_slots import _split_len, batch_axes
+from repro.sync import SyncLibrary
+
+PyTree = Any
+
+
+class PagePoolExhausted(RuntimeError):
+    """alloc() asked for more pages than the free list holds."""
+
+
+class PagePool:
+    """Fixed page arena bookkeeping: FIFO free list under a ticket mutex.
+
+    The free list itself is trivially O(1); what matters (the paper's
+    lesson) is how few synchronizing accesses each acquire of the
+    guarding mutex needs. ``alloc``/``free`` are the only entry points
+    and both take the lock, so the critical section *is* the allocator.
+    ``grant_log`` records the tag of every allocation in lock-grant
+    order — the ticket lock makes that order FIFO in ticket order, which
+    the churn tests pin.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 sync: Optional[SyncLibrary] = None,
+                 expected_contention: float = 0.25):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError("num_pages and page_size must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.sync = sync if sync is not None else SyncLibrary.host_default()
+        self.choice = self.sync.choice(
+            PrimitiveKind.MUTEX, expected_contention=expected_contention)
+        # Algorithm-3 ticket lock; strategy per the machine abstraction's
+        # read of the expected allocator contention. A library-level
+        # strategy pin overrides the selection exactly as it does inside
+        # ``SyncLibrary.mutex`` — report ``wait_strategy``, not
+        # ``choice.strategy``, as what the allocator actually runs.
+        self.wait_strategy = self.sync.strategy or self.choice.strategy
+        self.mutex = self.sync.mutex(
+            kind="ticket", expected_contention=expected_contention)
+        self._free = collections.deque(range(num_pages))
+        self._allocated = np.zeros(num_pages, bool)
+        self.allocs = 0
+        self.frees = 0
+        self.peak_in_use = 0
+        self.grant_log: List[Any] = []
+
+    # ----------------------------------------------------------------- state
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` flat positions."""
+        return -(-max(int(tokens), 0) // self.page_size)
+
+    # ------------------------------------------------------------- hot path
+    def alloc(self, n: int, tag: Any = None) -> np.ndarray:
+        """Claim ``n`` pages (FIFO reuse order). Raises
+        :class:`PagePoolExhausted` without allocating when fewer than
+        ``n`` are free — callers gate admission on ``n_free`` first."""
+        if n < 0:
+            raise ValueError("alloc of negative page count")
+        with self.mutex:
+            if n > len(self._free):
+                raise PagePoolExhausted(
+                    f"need {n} pages, {len(self._free)} free of "
+                    f"{self.num_pages}")
+            ids = np.asarray([self._free.popleft() for _ in range(n)],
+                             np.int32)
+            self._allocated[ids] = True
+            self.allocs += 1
+            self.peak_in_use = max(self.peak_in_use, self.in_use)
+            self.grant_log.append(tag)
+        return ids
+
+    def free(self, ids) -> None:
+        """Return pages to the tail of the free list. Like ``alloc``,
+        failure is atomic: every id is validated before any is freed."""
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        with self.mutex:
+            for i in ids:
+                i = int(i)
+                if not (0 <= i < self.num_pages) or not self._allocated[i]:
+                    raise RuntimeError(f"freeing unallocated page {i}")
+            if len(set(ids.tolist())) != ids.size:
+                raise RuntimeError("freeing a page twice in one call")
+            for i in ids:
+                self._allocated[i] = False
+                self._free.append(int(i))
+            self.frees += 1
+
+    # ------------------------------------------------------------ invariants
+    def check(self) -> None:
+        """Free list and allocation bitmap partition the arena exactly."""
+        free = list(self._free)
+        assert len(set(free)) == len(free), "duplicate page on free list"
+        assert not self._allocated[free].any(), "free page marked allocated"
+        assert int(self._allocated.sum()) + len(free) == self.num_pages, \
+            "pages leaked: allocated + free != arena"
+
+
+class PagedSlotPool:
+    """Block-table KV pool satisfying the ``SlotPool`` engine surface.
+
+    ``max_len`` keeps its contiguous-layout meaning of *arena sizing*:
+    the default page budget is ``ceil(K * max_len / page_size)`` — equal
+    arena bytes — but any single slot may grow to
+    ``max_pages_per_slot * page_size`` tokens (``virtual_max_len``).
+    That bound also sizes the per-row gathered attention view, so it
+    defaults to two slot rows (``ceil(2 * max_len / page_size)``): long
+    contexts at near-contiguous decode cost. Passing
+    ``max_pages_per_slot`` explicitly (up to ``num_pages``) trades
+    gather width for longer contexts.
+
+    Leaves named ``k``/``v`` (time-axis caches) are paged; every other
+    leaf (mamba conv/h state — no time axis) stays slot-dense exactly as
+    in ``SlotPool``, using the same detected batch axes.
+    """
+
+    def __init__(self, model, capacity: int, max_len: int, *,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 max_pages_per_slot: Optional[int] = None,
+                 sync: Optional[SyncLibrary] = None,
+                 expected_contention: float = 0.25):
+        if capacity < 1:
+            raise ValueError("slot pool capacity must be >= 1")
+        self.capacity = capacity
+        self.max_len = max_len
+        self.page_size = page_size
+        if num_pages is None:
+            num_pages = -(-capacity * max_len // page_size)
+        self.pages = PagePool(num_pages, page_size, sync=sync,
+                              expected_contention=expected_contention)
+        if max_pages_per_slot is None:
+            max_pages_per_slot = -(-2 * max_len // page_size)
+        self.max_pages_per_slot = min(max_pages_per_slot, num_pages)
+
+        self._axes = batch_axes(model, max_len)
+        shapes, _ = _split_len(
+            model.init_cache(capacity, max_len, for_shapes=True))
+        self._treedef = jax.tree_util.tree_structure(shapes)
+        paths = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        self._paged: List[bool] = []
+        leaves = []
+        for (path, leaf), ax in zip(paths, self._axes):
+            key = getattr(path[-1], "key", None)
+            paged = key in ("k", "v")
+            self._paged.append(paged)
+            if paged:
+                if leaf.shape[ax] != capacity or leaf.shape[ax + 1] != max_len:
+                    raise ValueError(
+                        f"k/v leaf {leaf.shape} lacks [batch, time] at "
+                        f"axes ({ax}, {ax + 1})")
+                shape = (leaf.shape[:ax] + (num_pages, page_size)
+                         + leaf.shape[ax + 2:])
+            else:
+                shape = leaf.shape
+            leaves.append(jnp.zeros(shape, leaf.dtype))
+        self.arena: PyTree = jax.tree_util.tree_unflatten(
+            self._treedef, leaves)
+
+        self.lens: jax.Array = jnp.zeros((capacity,), jnp.int32)
+        # sentinel = num_pages: gathers clip it, scattered writes drop it
+        self._tables = np.full((capacity, self.max_pages_per_slot),
+                               num_pages, np.int32)
+        self._free: List[int] = list(range(capacity))
+        self._rid: List[Optional[int]] = [None] * capacity
+        self._insert_jit = jax.jit(self._insert_impl)
+
+    # ------------------------------------------------------------- free list
+    @property
+    def virtual_max_len(self) -> int:
+        """Longest context one slot can hold — decoupled from ``max_len``
+        (which only sizes the arena): the paged layout's whole point."""
+        return self.max_pages_per_slot * self.page_size
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.capacity - len(self._free)
+
+    def active_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self._rid) if r is not None]
+
+    def rid_of(self, slot: int) -> Optional[int]:
+        return self._rid[slot]
+
+    def acquire(self, rid: int) -> int:
+        """Claim the next free slot (FIFO reuse order) for request rid."""
+        if not self._free:
+            raise RuntimeError("slot pool exhausted — admission must gate "
+                               "on the semaphore before acquiring")
+        slot = self._free.pop(0)
+        self._rid[slot] = rid
+        return slot
+
+    def evict(self, slot: int) -> None:
+        """Retire a slot: reclaim its pages (one allocator critical
+        section), reset its table row to sentinel."""
+        if self._rid[slot] is None:
+            raise RuntimeError(f"evicting free slot {slot}")
+        held = self._tables[slot][self._tables[slot] < self.pages.num_pages]
+        if held.size:
+            self.pages.free(held)
+        self._tables[slot] = self.pages.num_pages
+        self._rid[slot] = None
+        self._free.append(slot)
+
+    # ------------------------------------------------------------- admission
+    def can_reserve(self, tokens: int) -> bool:
+        """Whether an insert reserving ``tokens`` flat positions can be
+        satisfied right now (admission gates on this *before* taking the
+        slot semaphore, so head-of-line blocking stays FIFO)."""
+        n = self.pages.pages_for(tokens)
+        return n <= self.max_pages_per_slot and n <= self.pages.n_free
+
+    # --------------------------------------------------------------- device
+    def _insert_impl(self, arena, lens, req, ids, slot, length):
+        la = jax.tree_util.tree_leaves(arena)
+        lr = jax.tree_util.tree_leaves(req)
+        n_data = ids.shape[0]
+        out = []
+        for a, r, ax, paged in zip(la, lr, self._axes, self._paged):
+            if not paged:
+                out.append(jax.lax.dynamic_update_slice_in_dim(
+                    a, r.astype(a.dtype), slot, axis=ax))
+                continue
+            ps = a.shape[ax + 1]
+            r = jnp.squeeze(r, axis=ax)              # drop batch-1; time at ax
+            s = r.shape[ax]
+            pad = [(0, 0)] * r.ndim
+            pad[ax] = (0, n_data * ps - s)
+            r = jnp.pad(r, pad).reshape(
+                r.shape[:ax] + (n_data, ps) + r.shape[ax + 1:])
+            idx = (slice(None),) * ax + (ids,)
+            out.append(a.at[idx].set(r.astype(a.dtype)))
+        return (jax.tree_util.tree_unflatten(self._treedef, out),
+                lens.at[slot].set(length))
+
+    def insert(self, slot: int, req_cache: PyTree, length,
+               reserve: Optional[int] = None) -> None:
+        """Scatter a prefilled batch-1 request cache into ``slot``'s
+        pages, allocating them now (one allocator critical section).
+
+        ``reserve`` is the total flat positions the request may ever
+        occupy (prompt + generation); all of its pages are claimed here,
+        so decode never allocates mid-dispatch and cannot deadlock on an
+        empty pool. When omitted it defaults to a full ``max_len`` row —
+        the contiguous layout's guarantee, so SlotPool-style callers can
+        never silently outgrow their pages. Prefill data covers the
+        first ``ceil(S/ps)`` pages; the remainder hold stale bytes
+        masked by the length vector until decode writes them.
+        """
+        lr = jax.tree_util.tree_leaves(_split_len(req_cache)[0])
+        s = 0
+        for leaf, ax, paged in zip(lr, self._axes, self._paged):
+            if paged:
+                s = leaf.shape[ax + 1]
+                break
+        reserve = max(int(reserve) if reserve is not None else self.max_len,
+                      s, int(length))
+        n_alloc = self.pages.pages_for(reserve)
+        if n_alloc > self.max_pages_per_slot:
+            raise ValueError(
+                f"reserve {reserve} needs {n_alloc} pages > "
+                f"max_pages_per_slot {self.max_pages_per_slot}")
+        n_data = self.pages.pages_for(s)
+        ids = self.pages.alloc(n_alloc, tag=self._rid[slot])
+        self._tables[slot, :n_alloc] = ids
+        self._tables[slot, n_alloc:] = self.pages.num_pages
+        req, _ = _split_len(req_cache)
+        self.arena, self.lens = self._insert_jit(
+            self.arena, self.lens, req, jnp.asarray(ids[:n_data]),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(length, jnp.int32))
+
+    def cache_view(self) -> PyTree:
+        """Model-cache form: arena leaves + 'len' vector + block table."""
+        out = dict(self.arena)
+        out["len"] = self.lens
+        out["pages"] = jnp.asarray(self._tables)
+        return out
+
+    def adopt(self, cache: PyTree) -> None:
+        """Take back the post-decode cache. The block table is host-owned
+        (decode passes it through untouched), so only arena + lens are
+        adopted."""
+        cache = dict(cache)
+        lens = cache.pop("len")
+        cache.pop("pages", None)
+        self.arena = cache
+        self.set_lens(lens)
+
+    def set_lens(self, lens: jax.Array) -> None:
+        self.lens = lens
+
+    # ------------------------------------------------------------ invariants
+    def check(self) -> None:
+        """Block tables and the page pool tell one consistent story."""
+        self.pages.check()
+        held: List[int] = []
+        for slot in range(self.capacity):
+            row = self._tables[slot]
+            real = row[row < self.pages.num_pages]
+            if self._rid[slot] is None:
+                assert real.size == 0, f"free slot {slot} holds pages"
+            else:
+                assert (row[:real.size] < self.pages.num_pages).all(), \
+                    f"slot {slot} table has sentinel holes"
+            held.extend(int(p) for p in real)
+        assert len(set(held)) == len(held), "page mapped by two slots"
+        assert sorted(held) == sorted(
+            np.flatnonzero(self.pages._allocated).tolist()), \
+            "block tables disagree with the allocation bitmap"

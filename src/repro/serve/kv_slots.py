@@ -40,18 +40,34 @@ def _split_len(cache):
 
 def batch_axes(model, max_len: int) -> List[int]:
     """Batch axis of every (flattened, 'len'-stripped) cache leaf,
-    detected by diffing batch-1 vs batch-2 ShapeDtypeStruct caches."""
-    c1, _ = _split_len(model.init_cache(1, max_len, for_shapes=True))
-    c2, _ = _split_len(model.init_cache(2, max_len, for_shapes=True))
-    l1 = jax.tree_util.tree_leaves(c1)
-    l2 = jax.tree_util.tree_leaves(c2)
+    detected by diffing batch-1 vs batch-2 ShapeDtypeStruct caches.
+
+    A leaf where some *non-batch* dim coincidentally also differs between
+    the two probes (e.g. a bucketed scratch dim that rounds differently
+    at batch 1) is disambiguated with a second batch-2 vs batch-3 probe:
+    the batch axis is the one that moves under both probes. Only a leaf
+    that stays ambiguous under the intersection raises.
+    """
+    def leaves(b):
+        rest, _ = _split_len(model.init_cache(b, max_len, for_shapes=True))
+        return jax.tree_util.tree_leaves(rest)
+
+    def diff(a, b):
+        return {i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y}
+
+    l1, l2 = leaves(1), leaves(2)
+    l3 = None
     axes = []
-    for a, b in zip(l1, l2):
-        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
-        if len(diff) != 1:
+    for i, (a, b) in enumerate(zip(l1, l2)):
+        d = diff(a, b)
+        if len(d) != 1:
+            if l3 is None:
+                l3 = leaves(3)
+            d = d & diff(b, l3[i])
+        if len(d) != 1:
             raise ValueError(
                 f"cannot locate batch axis for cache leaf {a.shape}")
-        axes.append(diff[0])
+        axes.append(d.pop())
     return axes
 
 
@@ -79,6 +95,12 @@ class SlotPool:
         self._insert_jit = jax.jit(self._insert_impl)
 
     # ------------------------------------------------------------- free list
+    @property
+    def virtual_max_len(self) -> int:
+        """Longest context one slot can hold (== the physical row here;
+        the paged layout decouples the two)."""
+        return self.max_len
+
     @property
     def n_free(self) -> int:
         return len(self._free)
@@ -121,8 +143,15 @@ class SlotPool:
         return (jax.tree_util.tree_unflatten(self._treedef, out),
                 lens.at[slot].set(length))
 
-    def insert(self, slot: int, req_cache: PyTree, length) -> None:
-        """Write a prefilled batch-1 request cache into ``slot``."""
+    def insert(self, slot: int, req_cache: PyTree, length,
+               reserve: Optional[int] = None) -> None:
+        """Write a prefilled batch-1 request cache into ``slot``.
+
+        ``reserve`` (total tokens the request may ever occupy) is a
+        paged-layout concern; the contiguous arena always holds a full
+        ``max_len`` row, so it is accepted and ignored here.
+        """
+        del reserve
         req, _ = _split_len(req_cache)
         self.arena, self.lens = self._insert_jit(
             self.arena, self.lens, req,
@@ -133,6 +162,14 @@ class SlotPool:
         out = dict(self.arena)
         out["len"] = self.lens
         return out
+
+    def adopt(self, cache: PyTree) -> None:
+        """Take back the post-decode cache (as returned by decode_step on
+        a ``cache_view()``): arena leaves + advanced 'len' vector."""
+        cache = dict(cache)
+        lens = cache.pop("len")
+        self.arena = cache
+        self.set_lens(lens)
 
     def set_lens(self, lens: jax.Array) -> None:
         """Adopt the post-decode length vector (engine calls this after

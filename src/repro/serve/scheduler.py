@@ -44,6 +44,22 @@ def plan_admission(arrivals_s: np.ndarray, service_s: np.ndarray,
                               backend=lib.planning_backend_name())
 
 
+def allocator_contention(capacity: int, service_steps: float) -> float:
+    """Expected contention on the KV page allocator's mutex, for
+    ``select_impl``'s wait-strategy relaxation (paper Section 6).
+
+    The allocator is entered once per admission and once per retirement,
+    i.e. about ``2K / service`` critical sections per decode step from K
+    concurrent slots; the contention fraction is that entrant rate per
+    participant. Long-lived requests (service >> 2) make the allocator a
+    low-contention lock — the selector then relaxes toward cheaper spin
+    waits; pathological churn (service of a step or two) saturates it.
+    """
+    if capacity < 1:
+        return 0.0
+    return float(min(1.0, 2.0 / max(float(service_steps), 1.0)))
+
+
 class AdmissionController:
     """Host-side concurrency gate: FIFO-fair semaphore from the library.
 

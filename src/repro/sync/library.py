@@ -124,8 +124,13 @@ class SyncLibrary:
         return name if get_backend(name).fast_plans else "kernel"
 
     # ------------------------------------------------------------- live form
-    def mutex(self, kind: Optional[str] = None):
-        c = self.choice(PrimitiveKind.MUTEX)
+    def mutex(self, kind: Optional[str] = None, *,
+              expected_contention: float = 1.0):
+        """Live mutex. ``expected_contention`` (fraction of participants
+        expected to contend at once) feeds the paper's Section-6 wait-
+        strategy relaxation — hot allocators pass their own estimate."""
+        c = self.choice(PrimitiveKind.MUTEX,
+                        expected_contention=expected_contention)
         kind = kind or self.mutex_kind or c.algorithm
         return self._backend().mutex(kind, self.strategy or c.strategy)
 

@@ -1,0 +1,440 @@
+"""Paged KV arena: allocator invariants under churn, mutex FIFO grants,
+and cross-layout / cross-backend serving equivalence.
+
+The equivalence suite is the contract that lets the paged layout ship as
+a drop-in: for admit/decode/evict traces, the paged and contiguous
+engines must emit identical token streams and identical semaphore grant
+orders, on every sync backend.
+"""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional in this image (tests/_hypothesis_compat.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_arch
+from repro.core.hostsync import TicketMutex
+from repro.models import build_model
+from repro.models.attention import gather_pages, scatter_page_token
+from repro.serve.engine import SlotServeEngine
+from repro.serve.kv_pages import PagedSlotPool, PagePool, PagePoolExhausted
+from repro.serve.kv_slots import SlotPool, batch_axes
+from repro.sync import SyncLibrary
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_arch("qwen3-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ------------------------------------------------------------ page helpers
+def test_gather_scatter_pages_roundtrip():
+    """Pages in a shuffled physical order still read back in flat
+    position order; sentinel pages drop writes and mask reads."""
+    num_pages, ps = 6, 4
+    arena = jnp.zeros((num_pages, ps, 2), jnp.float32)
+    pages = jnp.asarray([[3, 1, num_pages], [0, 4, 2]], jnp.int32)
+    for pos in range(2 * ps):
+        val = jnp.stack([jnp.full((2,), 100.0 + pos),
+                         jnp.full((2,), 200.0 + pos)])
+        arena = scatter_page_token(
+            arena, pages, jnp.asarray([pos, pos], jnp.int32), val)
+    flat = gather_pages(arena, pages)                    # [2, 3*ps, 2]
+    np.testing.assert_array_equal(
+        np.asarray(flat[0, :2 * ps, 0]), 100.0 + np.arange(2 * ps))
+    np.testing.assert_array_equal(
+        np.asarray(flat[1, :2 * ps, 0]), 200.0 + np.arange(2 * ps))
+    # row 0's third page is the sentinel: its writes must have dropped,
+    # so no page of the arena saw row 0's positions >= 2*ps
+    arena2 = scatter_page_token(
+        arena, pages, jnp.asarray([2 * ps, 0], jnp.int32),
+        jnp.stack([jnp.full((2,), -1.0), jnp.full((2,), 999.0)]))
+    assert not np.any(np.asarray(arena2) == -1.0)
+    assert np.any(np.asarray(arena2) == 999.0)
+    # positions past the block table drop as well
+    arena3 = scatter_page_token(
+        arena, pages, jnp.asarray([3 * ps + 1, 3 * ps + 1], jnp.int32),
+        jnp.full((2, 2), -7.0))
+    assert not np.any(np.asarray(arena3) == -7.0)
+
+
+# ------------------------------------------------------------- page pool
+def test_page_pool_alloc_free_fifo_reuse():
+    pool = PagePool(4, 8)
+    a = pool.alloc(2, tag="a")
+    np.testing.assert_array_equal(a, [0, 1])
+    pool.free(a)
+    b = pool.alloc(3, tag="b")
+    np.testing.assert_array_equal(b, [2, 3, 0])      # FIFO reuse order
+    with pytest.raises(PagePoolExhausted):
+        pool.alloc(2)
+    assert pool.n_free == 1                          # failed alloc is atomic
+    with pytest.raises(RuntimeError):
+        pool.free([1])                               # not allocated
+    with pytest.raises(RuntimeError):
+        pool.free([int(b[0]), 1])                    # failed free is atomic:
+    assert pool.in_use == 3                          # b[0] still allocated
+    pool.check()
+    with pytest.raises(RuntimeError):
+        pool.free([int(b[0]), int(b[0])])            # double-free in one call
+    assert pool.in_use == 3
+    pool.free(b)
+    pool.check()
+    assert pool.grant_log == ["a", "b"]
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_page_pool_churn_no_leaks(seed):
+    """Thousands of random alloc/free steps: the free list and the
+    allocation bitmap partition the arena at every checkpoint, failed
+    allocs change nothing, and a full drain returns every page."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(48, 4)
+    held = {}
+    next_tag = 0
+    for step in range(2500):
+        if held and (rng.random() < 0.45 or pool.n_free == 0):
+            tag = list(held)[rng.integers(len(held))]
+            pool.free(held.pop(tag))
+        else:
+            n = int(rng.integers(1, 6))
+            if n <= pool.n_free:
+                held[next_tag] = pool.alloc(n, tag=next_tag)
+                next_tag += 1
+            else:
+                before = pool.n_free
+                with pytest.raises(PagePoolExhausted):
+                    pool.alloc(n)
+                assert pool.n_free == before
+        if step % 250 == 0:
+            pool.check()
+    for ids in held.values():
+        pool.free(ids)
+    pool.check()
+    assert pool.in_use == 0 and pool.n_free == pool.num_pages
+    assert pool.allocs == len(pool.grant_log)
+
+
+def test_page_pool_mutex_is_ticket_lock_with_selected_strategy():
+    lib = SyncLibrary.host_default()
+    pool = PagePool(8, 4, sync=lib, expected_contention=0.1)
+    assert isinstance(pool.mutex, TicketMutex)
+    assert pool.choice.strategy is not None
+
+
+def test_page_alloc_fifo_grant_order_under_contention():
+    """No starvation: with the allocator's ticket mutex held while N
+    threads queue up (arrival order enforced via the mutex's own ticket
+    counter), allocations are granted in exactly ticket order."""
+    pool = PagePool(64, 4)
+    n = 12
+    assert pool.mutex.lock(timeout=5.0)          # hold the critical section
+    threads = []
+
+    def worker(i):
+        pool.alloc(1, tag=i)
+
+    def wait_until(pred):
+        deadline = time.monotonic() + 5.0
+        while not pred():
+            assert time.monotonic() < deadline, "ticket queue stalled"
+            time.sleep(1e-4)
+
+    for i in range(n):
+        t = threading.Thread(target=worker, args=(i,))
+        t.start()
+        threads.append(t)
+        # each requester holds its ticket before the next one arrives
+        wait_until(lambda: pool.mutex._ticket.load() == i + 2)
+    pool.mutex.unlock()
+    for t in threads:
+        t.join()
+    assert pool.grant_log == list(range(n))      # FIFO, nobody starved
+    pool.check()
+
+
+# ------------------------------------------------------- paged slot pool
+class _TinyCacheModel:
+    """Stub model: one stacked attention family + one dense state leaf,
+    enough to exercise every PagedSlotPool code path without jitting a
+    real transformer."""
+
+    def init_cache(self, b, max_len, for_shapes=False):
+        def mk(shape, dtype):
+            if for_shapes:
+                return jax.ShapeDtypeStruct(shape, dtype)
+            return jnp.zeros(shape, dtype)
+        return {
+            "periods": {"layer_0": {"k": mk((2, b, max_len, 1, 2),
+                                            jnp.float32),
+                                    "v": mk((2, b, max_len, 1, 2),
+                                            jnp.float32)}},
+            "leftover": {"layer_0": {"k": mk((b, max_len, 1, 2),
+                                             jnp.float32),
+                                     "v": mk((b, max_len, 1, 2),
+                                             jnp.float32),
+                                     "conv": mk((b, 3, 2), jnp.float32)}},
+            "len": mk((), jnp.int32),
+        }
+
+
+def _tiny_req_cache(max_len, fill):
+    model = _TinyCacheModel()
+    cache = model.init_cache(1, max_len)
+    return jax.tree_util.tree_map(lambda a: jnp.full_like(a, fill), cache)
+
+
+def test_paged_pool_insert_scatters_and_view_gathers():
+    model = _TinyCacheModel()
+    pool = PagedSlotPool(model, capacity=2, max_len=8, page_size=4)
+    s0 = pool.acquire(rid=10)
+    pool.insert(s0, _tiny_req_cache(6, 3.0), 6, reserve=10)
+    view = pool.cache_view()
+    assert view["pages"].shape == (2, pool.max_pages_per_slot)
+    np.testing.assert_array_equal(np.asarray(pool.lens), [6, 0])
+    # gather slot 0's pages from the periods arena: first 6 flat
+    # positions hold the inserted values
+    arena_k = view["periods"]["layer_0"]["k"][0]         # [num_pages, 4, 1, 2]
+    pages0 = view["pages"][0:1]
+    flat = np.asarray(gather_pages(arena_k, pages0))[0]  # [P*4, 1, 2]
+    assert (flat[:6] == 3.0).all()
+    # the dense (non-paged) leaf took the slot write
+    conv = np.asarray(view["leftover"]["layer_0"]["conv"])
+    assert (conv[s0] == 3.0).all() and (conv[1 - s0] == 0.0).all()
+    # reserve=10 -> 3 pages held even though prefill covered 2
+    assert pool.pages.in_use == 3
+    pool.check()
+    pool.evict(s0)
+    assert pool.pages.in_use == 0
+    pool.check()
+
+
+def test_paged_pool_slot_fifo_and_errors():
+    pool = PagedSlotPool(_TinyCacheModel(), capacity=3, max_len=8,
+                         page_size=4)
+    s0, s1 = pool.acquire(0), pool.acquire(1)
+    assert (s0, s1) == (0, 1)
+    pool.evict(s0)
+    assert pool.acquire(2) == 2                  # FIFO slot reuse
+    with pytest.raises(RuntimeError):
+        pool.evict(s0)                           # double evict
+    pool.insert(s1, _tiny_req_cache(4, 1.0), 4)
+    with pytest.raises(ValueError):
+        # reserve beyond max_pages_per_slot (the whole arena here)
+        pool.insert(2, _tiny_req_cache(4, 1.0), 4,
+                    reserve=pool.virtual_max_len + 1)
+
+
+def test_paged_pool_virtual_max_len_exceeds_slot_row():
+    pool = PagedSlotPool(_TinyCacheModel(), capacity=4, max_len=8,
+                         page_size=4)
+    assert pool.pages.num_pages == 8             # equal arena bytes
+    # default bound: two slot rows per request (bounds the gather width)
+    assert pool.virtual_max_len == 16 > pool.max_len
+    assert pool.can_reserve(12)                  # one slot, 1.5 rows long
+    assert not pool.can_reserve(17)              # past the per-slot bound
+    # opting up to the whole arena is explicit
+    wide = PagedSlotPool(_TinyCacheModel(), capacity=4, max_len=8,
+                         page_size=4, max_pages_per_slot=8)
+    assert wide.virtual_max_len == 32
+    assert wide.can_reserve(20) and not wide.can_reserve(33)
+
+
+@settings(max_examples=2, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_paged_pool_churn_invariants(seed):
+    """Hundreds of random acquire/insert/evict steps on the pool itself:
+    block tables and the allocator bitmap stay a partition, inserts that
+    cannot be satisfied fail atomically, and draining leaks nothing."""
+    rng = np.random.default_rng(seed)
+    pool = PagedSlotPool(_TinyCacheModel(), capacity=3, max_len=8,
+                         page_size=4)
+    active = {}
+    rid = 0
+    for step in range(300):
+        do_insert = pool.n_free > 0 and (not active or rng.random() < 0.55)
+        if do_insert:
+            s = int(rng.choice([4, 8]))          # bounded jit buckets
+            reserve = s + int(rng.integers(0, 9))
+            if pool.can_reserve(reserve):
+                slot = pool.acquire(rid)
+                pool.insert(slot, _tiny_req_cache(s, float(rid % 7)),
+                            s, reserve=reserve)
+                active[slot] = rid
+                rid += 1
+        elif active:
+            slot = list(active)[rng.integers(len(active))]
+            del active[slot]
+            pool.evict(slot)
+        if step % 50 == 0:
+            pool.check()
+    for slot in list(active):
+        pool.evict(slot)
+    pool.check()
+    assert pool.pages.in_use == 0
+    assert pool.pages.n_free == pool.pages.num_pages
+
+
+# --------------------------------------------------- batch_axes regression
+class _QuirkyCacheModel:
+    """A leaf whose scratch dim buckets differently at batch 1 — the 1-vs-2
+    probe alone sees two differing dims and used to raise."""
+
+    def init_cache(self, b, max_len, for_shapes=False):
+        scratch = 4 if b == 1 else 8
+        return {
+            "periods": {"layer_0": {
+                "k": jax.ShapeDtypeStruct((2, b, max_len, 1, 2),
+                                          jnp.float32),
+                "v": jax.ShapeDtypeStruct((2, b, max_len, 1, 2),
+                                          jnp.float32),
+                "scratch": jax.ShapeDtypeStruct((b, scratch), jnp.float32),
+            }},
+            "leftover": {},
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+def test_batch_axes_disambiguates_coincident_dim():
+    axes = batch_axes(_QuirkyCacheModel(), max_len=8)
+    assert axes == [1, 0, 1]                     # k, scratch, v (dict order)
+
+
+class _HopelessCacheModel:
+    """Two dims move with batch in *both* probes: genuinely ambiguous."""
+
+    def init_cache(self, b, max_len, for_shapes=False):
+        return {
+            "periods": {"layer_0": {
+                "x": jax.ShapeDtypeStruct((b, b, max_len), jnp.float32),
+            }},
+            "leftover": {},
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+def test_batch_axes_still_raises_when_truly_ambiguous():
+    with pytest.raises(ValueError, match="cannot locate batch axis"):
+        batch_axes(_HopelessCacheModel(), max_len=8)
+
+
+# ------------------------------------------- cross-layout equivalence
+def _run_trace(model, params, kv_layout, sync, trace, *, capacity, max_len):
+    eng = SlotServeEngine(
+        model, params, capacity=capacity, max_len=max_len,
+        decode_chunk=trace["chunk"], kv_layout=kv_layout, page_size=8,
+        eos_id=trace.get("eos"), sync=sync)
+    pending = list(trace["arrivals"])            # (step, prompt, max_new)
+    while pending or eng.queue or eng.active:
+        while pending and pending[0][0] <= eng.step_clock:
+            _, prompt, max_new = pending.pop(0)
+            eng.submit(prompt, max_new)
+        if eng.step() == 0 and not eng.queue and pending:
+            eng.step_clock += 1                  # idle until next arrival
+    return eng
+
+
+def _trace_fingerprint(eng):
+    return (eng.grant_log,
+            {r.rid: r.out_tokens for r in eng.finished})
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000), capacity=st.integers(1, 3),
+       chunk=st.integers(1, 2))
+def test_cross_layout_equivalence_random_traces(lm_setup, seed, capacity,
+                                                chunk):
+    """Property: random admit/decode/evict traces produce identical token
+    streams and identical semaphore grant orders on both layouts."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(4, 7))
+    arrivals = []
+    step = 0
+    for _ in range(n_req):
+        step += int(rng.integers(0, 3))
+        arrivals.append((step, rng.integers(0, cfg.vocab_size,
+                                            int(rng.integers(3, 9))),
+                         int(rng.integers(2, 5))))
+    trace = {"arrivals": arrivals, "chunk": chunk}
+    sync = SyncLibrary.host_default()
+    slots = _run_trace(model, params, "slots", sync, trace,
+                       capacity=capacity, max_len=24)
+    paged = _run_trace(model, params, "paged", sync, trace,
+                       capacity=capacity, max_len=24)
+    assert _trace_fingerprint(slots) == _trace_fingerprint(paged)
+    assert len(paged.finished) == n_req
+    paged.pool.check()                           # drained: no page leaks
+    assert paged.pool.pages.in_use == 0
+
+
+_BACKEND_FPS = {}
+
+
+@pytest.mark.parametrize("backend", ["host", "kernel", "ref"])
+def test_cross_layout_equivalence_per_backend(lm_setup, backend):
+    """One mixed trace (staggered arrivals, early eos, N > K) gives one
+    identical fingerprint across layouts on every sync backend — and the
+    fingerprints collected across backends all agree with each other."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(42)
+    arrivals = [(0, rng.integers(1, cfg.vocab_size, 6), 4),
+                (0, rng.integers(1, cfg.vocab_size, 4), 3),
+                (2, rng.integers(1, cfg.vocab_size, 8), 4),
+                (3, rng.integers(1, cfg.vocab_size, 5), 2),
+                (5, rng.integers(1, cfg.vocab_size, 3), 3)]
+    trace = {"arrivals": arrivals, "chunk": 2, "eos": 0}
+    sync = SyncLibrary.host_default(backend=backend)
+    slots = _run_trace(model, params, "slots", sync, trace,
+                       capacity=2, max_len=16)
+    paged = _run_trace(model, params, "paged", sync, trace,
+                       capacity=2, max_len=16)
+    fp = _trace_fingerprint(slots)
+    assert fp == _trace_fingerprint(paged)
+    paged.pool.check()
+    _BACKEND_FPS[backend] = fp
+    assert all(other == fp for other in _BACKEND_FPS.values()), \
+        f"backend {backend} fingerprint diverges: {_BACKEND_FPS.keys()}"
+
+
+# ------------------------------------------------- long-context acceptance
+def test_paged_serves_context_longer_than_slot_max_len(lm_setup):
+    """Equal arena bytes (K * max_len tokens), one request ~2x a slot row:
+    the paged engine finishes it and matches the contiguous token stream
+    computed with a big-enough slot arena."""
+    cfg, model, params = lm_setup
+    max_len, capacity = 16, 3
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab_size, 10)
+    new_tokens = 18                              # 10 + 18 + 1 = 29 > 16
+    paged = SlotServeEngine(model, params, capacity=capacity,
+                            max_len=max_len, kv_layout="paged", page_size=4,
+                            decode_chunk=2)
+    assert paged.pool.virtual_max_len >= 29 > max_len
+    with pytest.raises(ValueError):
+        # the contiguous layout cannot even accept this request
+        SlotServeEngine(model, params, capacity=capacity,
+                        max_len=max_len).submit(prompt, new_tokens)
+    req = paged.submit(prompt, new_tokens)
+    short = paged.submit(rng.integers(1, cfg.vocab_size, 4), 3)
+    paged.run_until_done(max_rounds=100)
+    assert len(req.out_tokens) == new_tokens
+    assert len(short.out_tokens) == 3
+    paged.pool.check()
+
+    wide = SlotServeEngine(model, params, capacity=1, max_len=32)
+    ref = wide.submit(prompt, new_tokens)
+    wide.run_until_done(max_rounds=100)
+    assert req.out_tokens == ref.out_tokens

@@ -112,6 +112,86 @@ def test_windowed_planner_buckets_and_warns_once():
     assert len(msgs) == 1  # one-time warning, not once per call
 
 
+def test_window_overflow_every_boundary_matches_ref():
+    """Overflow bucketing is exact at and around every power-of-2
+    boundary of the base window, for all three kernel families: the
+    bucketed plan equals the unbucketed ref plan at each trace length
+    straddling w, 2w, 4w, 8w (one below, at, and one above)."""
+    from repro.kernels.semaphore.ops import (semaphore_admission,
+                                             semaphore_admission_window)
+    from repro.kernels.ticket_lock.ops import (ticket_lock_run,
+                                               ticket_lock_window)
+    from repro.kernels.xf_barrier.ops import xf_barrier, xf_barrier_window
+    import jax.numpy as jnp
+
+    w = 4
+    boundaries = sorted({n for bucket in (w, 2 * w, 4 * w, 8 * w)
+                         for n in (bucket - 1, bucket, bucket + 1)})
+    rng = np.random.default_rng(11)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for n in boundaries:
+            arr = np.sort(rng.uniform(0, 4, n)).astype(np.float32)
+            hold = rng.uniform(0.5, 2, n).astype(np.float32)
+            gw, rw_, ww = semaphore_admission_window(
+                arr, hold, capacity=2, window=w, use_kernel=False)
+            assert gw.shape == (n,)
+            g, r, wtd = semaphore_admission(
+                jnp.asarray(arr), jnp.asarray(hold), capacity=2,
+                use_kernel=False)
+            np.testing.assert_allclose(gw, np.asarray(g), rtol=1e-6)
+            np.testing.assert_allclose(rw_, np.asarray(r), rtol=1e-6)
+            np.testing.assert_array_equal(ww, np.asarray(wtd))
+
+            arrival = rng.permutation(n).astype(np.int32)
+            m = rng.uniform(0.5, 1.5, n).astype(np.float32)
+            b = rng.normal(size=n).astype(np.float32)
+            go, to, acc = ticket_lock_window(arrival, m, b, window=w,
+                                             use_kernel=False)
+            g2, t2, acc2 = ticket_lock_run(
+                jnp.asarray(arrival), jnp.asarray(m), jnp.asarray(b),
+                use_kernel=False)
+            np.testing.assert_array_equal(go, np.asarray(g2))
+            np.testing.assert_array_equal(to, np.asarray(t2))
+            np.testing.assert_allclose(float(acc), float(acc2), rtol=2e-4)
+
+            present = (rng.uniform(size=n) < 0.7).astype(np.int32)
+            required = (rng.uniform(size=n) < 0.8).astype(np.int32)
+            flags = np.zeros(n, np.int32)
+            aw, relw, dw, sw = xf_barrier_window(
+                flags, 1, present, required, window=w, use_kernel=False)
+            a, rel, d, s = xf_barrier(
+                jnp.asarray(flags), jnp.int32(1), jnp.asarray(present),
+                jnp.asarray(required), use_kernel=False)
+            np.testing.assert_array_equal(aw, np.asarray(a))
+            np.testing.assert_array_equal(relw, np.asarray(rel))
+            assert int(dw) == int(d)
+            np.testing.assert_array_equal(sw, np.asarray(s))
+
+
+def test_window_overflow_warning_fires_once_per_planner():
+    """The one-time-warning contract: a planner warns on its *first*
+    overflow only — later overflows, even into different buckets, are
+    silent; a second planner instance gets its own first warning."""
+    def fresh():
+        return WindowedPlanner(
+            plan=lambda a: (a,),
+            pad=lambda arrays, n, w: (np.pad(arrays[0], (0, w - n)),),
+            base_window=4, name="overflow_planner")
+
+    p1, p2 = fresh(), fresh()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        p1(np.arange(5, dtype=np.float32))      # -> bucket 8: warns
+        p1(np.arange(17, dtype=np.float32))     # -> bucket 32: silent
+        p1(np.arange(9, dtype=np.float32))      # -> bucket 16: silent
+        p2(np.arange(6, dtype=np.float32))      # fresh planner: warns
+        p2(np.arange(3, dtype=np.float32))      # within window: silent
+    msgs = [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    assert len(msgs) == 2
+    assert all("overflow_planner" in str(w.message) for w in msgs)
+
+
 def test_ticket_and_barrier_windowed_match_unwindowed():
     from repro.kernels.ticket_lock.ops import (ticket_lock_run,
                                                ticket_lock_window)
