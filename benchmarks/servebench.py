@@ -7,7 +7,13 @@ arrivals at several concurrency budgets K, for
   * ``slots``   — the semaphore-gated continuous-batching slot engine,
   * ``paged``   — the same engine on the block-table page arena
     (serve/kv_pages.py): equal arena bytes, mutex-gated page
-    allocator on the admission/retire hot path,
+    allocator on the admission/retire hot path. Paged rows run lazy
+    growth by default and ALWAYS measure the eager (PR 3 worst-case
+    reservation) baseline alongside on the same trace: token streams
+    must match, and the row reports the allocator lock ledger —
+    ``lock_acquires_per_token`` plus its drop vs the eager run's
+    one-acquire-per-page accounting (``lock_drop_vs_pr3_per_page``,
+    the tentpole acceptance number),
 
 plus the Algorithm-5 kernel-planned wait percentiles for the same trace,
 so the predicted and measured timelines can be compared. ``--kv-layout``
@@ -41,14 +47,16 @@ def poisson_arrival_steps(n: int, capacity: int, new_tokens: int,
 
 def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
                       new_tokens, decode_chunk, seed, kv_layout="slots",
-                      page_size=16):
+                      page_size=16, page_growth="lazy",
+                      allocator_wait=None):
     from repro.serve.engine import SlotServeEngine
     n, prompt_len = prompts.shape
     max_len = prompt_len + new_tokens + 1
     engine = SlotServeEngine(model, params, capacity=capacity,
                              max_len=max_len, decode_chunk=decode_chunk,
                              seed=seed, kv_layout=kv_layout,
-                             page_size=page_size)
+                             page_size=page_size, page_growth=page_growth,
+                             allocator_wait=allocator_wait)
     # warm the prefill/decode traces outside the timed region, then
     # reset every counter the report reads (step clock included, so the
     # arrival schedule starts at 0)
@@ -58,11 +66,10 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
     engine.grant_log.clear()
     engine.decode_dispatches = 0
     engine.step_clock = 0
+    engine.pauses = engine.preemptions = 0
     engine.admission.admitted = engine.admission.completed = 0
     if kv_layout == "paged":
-        pp = engine.pool.pages
-        pp.allocs = pp.frees = pp.peak_in_use = 0
-        pp.grant_log.clear()
+        engine.pool.pages.reset_stats()
 
     t0 = time.perf_counter()
     nxt = 0
@@ -84,16 +91,30 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
         "decode_dispatches": int(st["decode_dispatches"]),
         "fifo_ok": bool(fifo_ok),
     }
+    streams = {r.rid: list(r.out_tokens) for r in engine.finished}
     if kv_layout == "paged":
         engine.pool.check()                  # leak-free after the drain
         row.update({
             "page_size": page_size,
+            "page_growth": engine.page_growth,
+            "allocator_wait": engine.pool.pages.wait_mode,
+            "wait_strategy": engine.pool.pages.wait_strategy.value,
             "pages_total": int(st["pages_total"]),
             "pages_peak_in_use": int(st["pages_peak_in_use"]),
             "page_allocs": int(st["page_allocs"]),
             "page_frees": int(st["page_frees"]),
+            "page_pauses": int(st["page_pauses"]),
+            "page_preemptions": int(st["page_preemptions"]),
+            "lock_acquires": int(st["lock_acquires"]),
+            "lock_contended_acquires": int(st["lock_contended_acquires"]),
+            "lock_held_s": float(st["lock_held_s"]),
+            "lock_acquires_per_token": float(st["lock_acquires_per_token"]),
+            # the PR 3 "per-page" accounting the acceptance criterion
+            # benchmarks against: one lock acquisition per page moved
+            "per_page_lock_acquires_per_token": float(
+                st["per_page_lock_acquires_per_token"]),
         })
-    return row
+    return row, streams
 
 
 def bench_legacy(model, params, prompts, *, new_tokens):
@@ -129,11 +150,21 @@ def main(argv=None):
                     default=[1, 4, 8])
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--decode-chunk", type=int, default=2)
+    ap.add_argument("--decode-chunk", type=int, default=4)
     ap.add_argument("--kv-layout", default="both",
                     choices=("slots", "paged", "both"),
                     help="which KV arena layout(s) to measure")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--page-growth", default="lazy",
+                    choices=("lazy", "eager"),
+                    help="paged-layout reservation policy for the main "
+                         "paged rows (the eager baseline is always "
+                         "measured alongside for the lock-traffic drop)")
+    ap.add_argument("--allocator-wait", default=None,
+                    choices=("auto", "spin", "spin_backoff",
+                             "sleeping", "adaptive"),
+                    help="pin the page allocator's wait strategy "
+                         "(default: select_impl's choice)")
     ap.add_argument("--load", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -146,8 +177,12 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     cfg = cfg.reduced()  # this bench targets the CPU smoke tier
     if args.smoke:
-        args.requests = min(args.requests, 12)
+        args.requests = min(args.requests, 16)
         args.capacities = [1, 4]
+        # oversubscribe slightly so admission/retire batches fill up and
+        # the steady-state (not the ramp/drain tails) dominates the
+        # lock-traffic accounting
+        args.load = max(args.load, 1.0)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
@@ -167,6 +202,8 @@ def main(argv=None):
             "decode_chunk": args.decode_chunk, "load": args.load,
             "page_size": args.page_size, "legacy": legacy}
     rows.update({layout: {} for layout in layouts})
+    if "paged" in layouts:
+        rows["paged_eager"] = {}
     for k in args.capacities:
         arrivals = poisson_arrival_steps(
             args.requests, k, args.new_tokens, args.load, rng)
@@ -174,17 +211,57 @@ def main(argv=None):
                               np.full(args.requests, float(args.new_tokens),
                                       np.float32), k)
         for layout in layouts:
-            got = bench_slot_engine(
+            got, streams = bench_slot_engine(
                 model, params, prompts, arrivals, capacity=k,
                 new_tokens=args.new_tokens, decode_chunk=args.decode_chunk,
-                seed=args.seed, kv_layout=layout, page_size=args.page_size)
+                seed=args.seed, kv_layout=layout, page_size=args.page_size,
+                page_growth=args.page_growth,
+                allocator_wait=args.allocator_wait)
             got["plan_p50_wait_steps"] = plan.p50_wait
             got["plan_p99_wait_steps"] = plan.p99_wait
             got["speedup_vs_legacy"] = got["tok_per_s"] / legacy["tok_per_s"]
+            extra = ""
+            if layout == "paged":
+                # the eager (PR 3 reservation) baseline on the same
+                # trace: token streams must match and the lock-traffic
+                # drop is the tentpole's acceptance number; when the
+                # main rows are already pinned eager, reuse them
+                # instead of re-running the identical configuration
+                if args.page_growth == "eager":
+                    eag, eag_streams = dict(got), streams
+                else:
+                    eag, eag_streams = bench_slot_engine(
+                        model, params, prompts, arrivals, capacity=k,
+                        new_tokens=args.new_tokens,
+                        decode_chunk=args.decode_chunk, seed=args.seed,
+                        kv_layout="paged", page_size=args.page_size,
+                        page_growth="eager",
+                        allocator_wait=args.allocator_wait)
+                eag["plan_p50_wait_steps"] = plan.p50_wait
+                eag["plan_p99_wait_steps"] = plan.p99_wait
+                eag["speedup_vs_legacy"] = (eag["tok_per_s"]
+                                            / legacy["tok_per_s"])
+                rows["paged_eager"][str(k)] = eag
+                got["eager_lazy_tokens_match"] = bool(streams == eag_streams)
+                lat = got["lock_acquires_per_token"]
+                got["lock_drop_vs_eager"] = (
+                    eag["lock_acquires_per_token"] / lat if lat else
+                    float("inf"))
+                # the PR 3 baseline the acceptance criterion names:
+                # worst-case reservation at insert, one lock acquisition
+                # per page moved — i.e. the eager run's per-page ledger
+                got["lock_drop_vs_pr3_per_page"] = (
+                    eag["per_page_lock_acquires_per_token"] / lat if lat
+                    else float("inf"))
+                extra = (f",pages_peak={got['pages_peak_in_use']}"
+                         f"/{got['pages_total']},"
+                         f"growth={got['page_growth']},"
+                         f"lock_per_tok={lat:.4f},"
+                         f"drop_vs_eager={got['lock_drop_vs_eager']:.2f}x,"
+                         f"drop_vs_pr3_per_page="
+                         f"{got['lock_drop_vs_pr3_per_page']:.2f}x,"
+                         f"tokens_match={got['eager_lazy_tokens_match']}")
             rows[layout][str(k)] = got
-            extra = ("" if layout == "slots" else
-                     f",pages_peak={got['pages_peak_in_use']}"
-                     f"/{got['pages_total']}")
             print(f"{layout}_engine_K{k},tok_per_s={got['tok_per_s']:.1f},"
                   f"p50_wait_steps={got['p50_wait_steps']:.1f},"
                   f"p99_wait_steps={got['p99_wait_steps']:.1f},"

@@ -32,9 +32,12 @@ if __name__ == "__main__":
     ap.add_argument("--kv-layout", default="slots",
                     choices=("slots", "paged"))
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--page-growth", default="lazy",
+                    choices=("lazy", "eager"))
     ex = ap.parse_args()
     argv = DEFAULTS + ["--kv-layout", ex.kv_layout,
-                       "--page-size", str(ex.page_size)]
+                       "--page-size", str(ex.page_size),
+                       "--page-growth", ex.page_growth]
     engine = main(argv)
     # N > K round-trip: every request finished, grants in arrival order
     assert len(engine.finished) == 12
@@ -57,11 +60,16 @@ if __name__ == "__main__":
         new_tokens = long_len - prompt.size
         paged = SlotServeEngine(
             engine.model, engine.params, capacity=4, max_len=max_len,
-            kv_layout="paged", page_size=ex.page_size, decode_chunk=2)
+            kv_layout="paged", page_size=ex.page_size, decode_chunk=2,
+            page_growth=ex.page_growth)
         req = paged.submit(prompt, max_new_tokens=new_tokens)
         paged.run_until_done(max_rounds=200)
         assert len(req.out_tokens) == new_tokens
         paged.pool.check()
+        if ex.page_growth == "lazy":
+            # the long context grew page by page: more allocation grants
+            # than the single eager reservation, one lock acquire each
+            assert paged.pool.pages.allocs > 1, "lazy growth never grew"
         legacy = ServeEngine(engine.model, engine.params, max_len=long_len + 1)
         want = legacy.generate(
             {"tokens": jnp.asarray(prompt)[None, :]}, new_tokens)

@@ -245,6 +245,43 @@ def select_impl(
         else select_backend(machine))
 
 
+def select_wait_strategy(
+    machine: MachineAbstraction,
+    measured_contention: float,
+) -> WaitStrategy:
+    """Re-select a mutex wait strategy from *measured* contention.
+
+    This is the paper's Section-6 spin-vs-sleep guideline turned into a
+    runtime decision: ``measured_contention`` is the observed fraction of
+    contended acquires over a recent window (e.g.
+    ``hostsync.TicketMutex.recent_contention``), not an a-priori
+    estimate. Contention-adaptive callers (``AdaptiveMutex``) re-resolve
+    between scheduler rounds — never mid-critical-section — so a lock
+    that measures uncontended relaxes to cheap spinning and a lock that
+    saturates falls back to the bounded-atomics sleep discipline.
+
+      * uncontended: aggressive spinning has the fewest total accesses —
+        the retried atomic almost always succeeds first try;
+      * moderate: backoff lets the atomic unit's queue drain (paper:
+        +40-60% on Fermi-class machines, whose line hostage punishes
+        tight polling at any contention level);
+      * saturated: front-load the atomics and poll a volatile word
+        (sleep) — on Tesla-class machines (contentious atomics 10-90x
+        volatile) the threshold for giving up on spinning is far lower.
+    """
+    c = min(max(float(measured_contention), 0.0), 1.0)
+    if not machine.has_atomics:
+        return WaitStrategy.SLEEP          # only flag/poll algorithms exist
+    cls = classify(machine)
+    if cls == "tesla-class":
+        return (WaitStrategy.SPIN if c < 0.02 else WaitStrategy.SLEEP)
+    if c < 0.10:
+        return WaitStrategy.SPIN
+    if cls == "fermi-class" or c < 0.50:
+        return WaitStrategy.SPIN_BACKOFF
+    return WaitStrategy.SLEEP
+
+
 def _select_algorithm(
     machine: MachineAbstraction,
     primitive: PrimitiveKind,

@@ -30,11 +30,12 @@ read), so the paper's designs — bound the atomics, front-load them, then poll
 
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from typing import Callable, List, Optional, Sequence
 
-from .abstraction import WaitStrategy
+from .abstraction import MachineAbstraction, WaitStrategy, select_wait_strategy
 
 # A "volatile-read unit" for backoff sleeps (paper: I * t_volatile_read).
 # On this host a plain attribute read is ~50ns; time.sleep granularity makes
@@ -115,25 +116,85 @@ def _wait(poll: Callable[[], bool], strategy: WaitStrategy,
 # Mutexes
 # ---------------------------------------------------------------------------
 
-class SpinMutex:
+class LockStats:
+    """Acquire/contended-acquire/held-time instrumentation, shared by the
+    host mutexes.
+
+    ``contended`` means the acquire did not succeed on its first
+    serializing access (spin retry needed / turn not yet ours) — the
+    paper's signal that the wait strategy matters at all. The last
+    ``contention_window`` acquires keep their contended bit in a sliding
+    window so contention-adaptive callers can re-select a strategy from
+    *measured* recent behavior (``recent_contention``), not lifetime
+    averages that stale the signal.
+
+    Counter writes are owner-side (post-acquire / pre-release), so they
+    add no synchronizing accesses of their own — exactly the accounting
+    discipline the paper uses when counting atomics per operation.
+    """
+
+    contention_window = 64
+
+    def _init_stats(self) -> None:
+        self.acquires = 0
+        self.contended_acquires = 0
+        self.held_s = 0.0
+        self._recent = collections.deque(maxlen=self.contention_window)
+        self._t_acquired = 0.0
+
+    def _note_acquire(self, contended: bool) -> None:
+        self.acquires += 1
+        self.contended_acquires += int(contended)
+        self._recent.append(int(contended))
+        self._t_acquired = time.perf_counter()
+
+    def _note_release(self) -> None:
+        self.held_s += time.perf_counter() - self._t_acquired
+
+    def recent_contention(self) -> float:
+        """Fraction of the last ``contention_window`` acquires that were
+        contended — the measured signal for strategy re-selection."""
+        if not self._recent:
+            return 0.0
+        return sum(self._recent) / len(self._recent)
+
+    def reset_stats(self) -> None:
+        """Zero the counters (benchmarks reset after their warm phase)."""
+        self._init_stats()
+
+    def lock_stats(self) -> dict:
+        return {
+            "acquires": self.acquires,
+            "contended_acquires": self.contended_acquires,
+            "held_s": self.held_s,
+            "recent_contention": self.recent_contention(),
+        }
+
+
+class SpinMutex(LockStats):
     """Paper Algorithm 1/2: atomicExch spin lock (optional backoff)."""
 
     def __init__(self, strategy: WaitStrategy = WaitStrategy.SPIN_BACKOFF):
         self._word = AtomicWord(0)
         self._strategy = strategy
+        self._init_stats()
 
     def lock(self, timeout: Optional[float] = None) -> bool:
         bo = Backoff()
         deadline = None if timeout is None else time.monotonic() + timeout
+        contended = False
         while True:
             if self._word.exch(1) == 0:
+                self._note_acquire(contended)
                 return True
+            contended = True
             if deadline is not None and time.monotonic() > deadline:
                 return False
             if self._strategy is not WaitStrategy.SPIN:
                 bo.pause()
 
     def unlock(self) -> None:
+        self._note_release()
         self._word.store(0)  # volatile store, no atomic (Alg. 2)
 
     def __enter__(self):
@@ -145,7 +206,7 @@ class SpinMutex:
         return False
 
 
-class TicketMutex:
+class TicketMutex(LockStats):
     """Paper Algorithm 3: fetch-and-add mutex — one atomic to lock, zero to
     unlock, FIFO-fair. The waiting is "GPU sleeping": polling a plain int.
     """
@@ -154,9 +215,11 @@ class TicketMutex:
         self._ticket = AtomicWord(0)
         self._turn = 0  # written only by the lock owner; read by waiters
         self._strategy = strategy
+        self._init_stats()
 
     def lock(self, timeout: Optional[float] = None) -> bool:
         my = self._ticket.fetch_add(1)
+        contended = self._turn != my
         ok = _wait(lambda: self._turn == my, self._strategy,
                    Backoff(1, 8), timeout)
         if not ok:
@@ -167,9 +230,11 @@ class TicketMutex:
                   Backoff(1, 8), None)
             self._turn = my + 1
             return False
+        self._note_acquire(contended)
         return True
 
     def unlock(self) -> None:
+        self._note_release()
         self._turn += 1  # owner-only write; no atomic needed
 
     def __enter__(self):
@@ -181,7 +246,7 @@ class TicketMutex:
         return False
 
 
-class FutexMutex:
+class FutexMutex(LockStats):
     """The Linux-style spin-then-block mutex (paper Section 2.1/5).
 
     Impossible on the GPU (no blocking); on the host it is the natural
@@ -193,10 +258,12 @@ class FutexMutex:
         self._word = AtomicWord(0)
         self._cond = threading.Condition()
         self._spin_tries = spin_tries
+        self._init_stats()
 
     def lock(self, timeout: Optional[float] = None) -> bool:
-        for _ in range(self._spin_tries):
+        for i in range(self._spin_tries):
             if self._word.exch(1) == 0:
+                self._note_acquire(i > 0)
                 return True
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
@@ -207,12 +274,91 @@ class FutexMutex:
                     if remaining <= 0:
                         return False
                 self._cond.wait(timeout=remaining if remaining else 0.05)
+            self._note_acquire(True)
             return True
 
     def unlock(self) -> None:
+        self._note_release()
         self._word.store(0)
         with self._cond:
             self._cond.notify(1)
+
+    def __enter__(self):
+        self.lock()
+        return self
+
+    def __exit__(self, *exc):
+        self.unlock()
+        return False
+
+
+class AdaptiveMutex:
+    """Contention-adaptive wrapper: a FIFO ticket mutex whose *wait
+    strategy* re-resolves from measured contention (paper Section 6).
+
+    The algorithm never changes — Algorithm 3's one-FA-acquire /
+    zero-atomic-release and its FIFO fairness hold at every strategy —
+    only how waiters wait does: ``retune()`` reads the inner lock's
+    sliding contention window and swaps its strategy via
+    ``select_wait_strategy``. Callers retune *between* scheduler rounds
+    (the strategy write is a single owner-side attribute store; waiters
+    already parked keep the strategy they entered with, new waiters see
+    the new one — never a mid-critical-section change of discipline).
+    """
+
+    def __init__(self, inner: TicketMutex, machine: MachineAbstraction):
+        self.inner = inner
+        self.machine = machine
+        self.retunes = 0
+
+    @property
+    def strategy(self) -> WaitStrategy:
+        return self.inner._strategy
+
+    def retune(self, measured_contention: Optional[float] = None
+               ) -> WaitStrategy:
+        """Re-select the wait strategy from measured contention (default:
+        the inner lock's recent window). Returns the strategy now in
+        effect."""
+        c = (self.inner.recent_contention()
+             if measured_contention is None else float(measured_contention))
+        new = select_wait_strategy(self.machine, c)
+        if new is not self.inner._strategy:
+            self.inner._strategy = new
+            self.retunes += 1
+        return new
+
+    # -- delegation: the wrapper is a drop-in mutex -------------------------
+    def lock(self, timeout: Optional[float] = None) -> bool:
+        return self.inner.lock(timeout=timeout)
+
+    def unlock(self) -> None:
+        self.inner.unlock()
+
+    def recent_contention(self) -> float:
+        return self.inner.recent_contention()
+
+    def reset_stats(self) -> None:
+        self.inner.reset_stats()
+
+    def lock_stats(self) -> dict:
+        st = self.inner.lock_stats()
+        st["retunes"] = self.retunes
+        st["strategy"] = self.inner._strategy.value
+        return st
+
+    # expose the counters the engines read
+    @property
+    def acquires(self) -> int:
+        return self.inner.acquires
+
+    @property
+    def contended_acquires(self) -> int:
+        return self.inner.contended_acquires
+
+    @property
+    def held_s(self) -> float:
+        return self.inner.held_s
 
     def __enter__(self):
         self.lock()

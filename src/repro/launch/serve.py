@@ -68,6 +68,7 @@ def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
         model, params, capacity=args.capacity, max_len=max_len,
         decode_chunk=args.decode_chunk, seed=args.seed,
         kv_layout=args.kv_layout, page_size=args.page_size,
+        page_growth=args.page_growth, allocator_wait=args.allocator_wait,
         sync=sync if sync is not None else make_sync_library(args))
     arrivals = (np.zeros(n) if arrivals_steps is None
                 else np.asarray(arrivals_steps))
@@ -115,6 +116,18 @@ def main(argv=None):
                          "per-slot contexts may exceed max_len)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (paged layout)")
+    ap.add_argument("--page-growth", default="lazy",
+                    choices=("lazy", "eager"),
+                    help="paged layout: grant pages lazily per decode "
+                         "chunk (admission gated by a headroom "
+                         "watermark) or reserve the worst case at "
+                         "insert")
+    ap.add_argument("--allocator-wait", default=None,
+                    choices=("auto", "spin", "spin_backoff", "sleeping",
+                             "adaptive"),
+                    help="page-allocator mutex wait strategy; adaptive "
+                         "re-selects between rounds from measured "
+                         "contention (default: select_impl's choice)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="also run the old per-request loop")
@@ -169,6 +182,15 @@ def main(argv=None):
               f"[{pool.pages.wait_strategy.value}], "
               f"virtual max_len {pool.virtual_max_len} "
               f"(slot arena row: {engine.max_len})")
+        print(f"[serve] allocator lock ({engine.page_growth} growth): "
+              f"{int(st['lock_acquires'])} acquires "
+              f"({int(st['lock_contended_acquires'])} contended, "
+              f"{st['lock_held_s'] * 1e3:.2f}ms held), "
+              f"{st['lock_acquires_per_token']:.4f} per token vs "
+              f"{st['per_page_lock_acquires_per_token']:.4f} one-per-page; "
+              f"{int(st['page_pauses'])} pauses, "
+              f"{int(st['page_preemptions'])} preemptions, "
+              f"{int(st['lock_retunes'])} retunes")
     fifo_ok = engine.grant_log == sorted(engine.grant_log)
     print(f"[serve] FIFO grant order: {'OK' if fifo_ok else 'VIOLATED'} "
           f"({len(engine.grant_log)} grants, semaphore in-flight "

@@ -123,6 +123,11 @@ class ServeRequest:
     finish_s: float = 0.0
     slot: int = -1
     eos: bool = False
+    #: times this request was evicted mid-stream by the lazy-growth
+    #: overflow path and restarted from its prompt (greedy decoding makes
+    #: the regenerated stream identical). Its original grant keeps the
+    #: wait-time stats and the one FIFO grant-log entry.
+    preemptions: int = 0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -141,6 +146,27 @@ class SlotServeEngine:
     from an outer serving loop. Decoder-only token LMs only (the slot
     pool itself also handles encoder-decoder caches; wiring an encdec
     front-end is an open roadmap item).
+
+    Under ``kv_layout="paged"`` allocator lock traffic is O(1) per
+    engine event: admissions, top-ups, and retirements each take the
+    page allocator's ticket mutex once *per scheduler round*, not per
+    request or per page. ``page_growth`` picks the reservation policy:
+
+      * ``"eager"`` — every page a request may ever touch is granted at
+        insert (PR 3 semantics: decode never allocates mid-dispatch);
+      * ``"lazy"`` (default) — insert grants only the prefill bucket and
+        a per-round top-up pass covers each coming chunk, so short-lived
+        requests never touch pages they won't fill; admission gates on
+        an ``admit_headroom`` watermark (fraction of the arena kept free
+        for in-flight top-ups) instead of the worst case, and the
+        overflow path — pause the starved row for a round, preempt the
+        youngest grant if *nobody* can decode — is eviction-safe: with
+        greedy decoding both modes emit identical token streams and the
+        engine ``grant_log`` stays the FIFO admission order.
+
+    ``allocator_wait`` pins the allocator's wait strategy ("spin",
+    "spin_backoff", "sleeping") or selects ``"adaptive"`` — re-resolved
+    between rounds from the measured contended-acquire fraction.
     """
 
     def __init__(self, model, params, *, capacity: int, max_len: int,
@@ -153,6 +179,10 @@ class SlotServeEngine:
                  page_size: int = 16,
                  num_pages: Optional[int] = None,
                  max_pages_per_slot: Optional[int] = None,
+                 page_growth: str = "lazy",
+                 admit_headroom: float = 0.1,
+                 page_lookahead_chunks: int = 2,
+                 allocator_wait: Optional[str] = None,
                  sync: Optional[SyncLibrary] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.frontend is not None:
@@ -161,6 +191,8 @@ class SlotServeEngine:
             raise ValueError("capacity and decode_chunk must be >= 1")
         if kv_layout not in ("slots", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if page_growth not in ("eager", "lazy"):
+            raise ValueError(f"unknown page_growth {page_growth!r}")
         self.model = model
         self.params = params
         self.capacity = capacity
@@ -180,12 +212,32 @@ class SlotServeEngine:
         # hybrid/SSM archs prefill at exact prompt length (retrace per
         # distinct length — workloads bucket their own prompts).
         self._can_pad = "mamba" not in cfg.layer_pattern
+        # The lazy pause/rollback path only rewinds what the paged k/v
+        # scatter touched (length vector; stale writes are re-written
+        # before first read). Recurrent state (mamba conv/h) advances
+        # destructively on frozen rows, so SSM/hybrid archs stay on
+        # eager growth: every page reserved at insert, never paused.
+        # Sampling engines stay eager too: a lazy-overflow preemption
+        # restarts the victim from its prompt, which only regenerates
+        # the identical stream under greedy decoding — with temperature
+        # the restart would retract tokens a caller already observed on
+        # ServeRequest.out_tokens.
+        if kv_layout == "paged" and (not self._can_pad
+                                     or temperature > 0.0):
+            page_growth = "eager"
+        self.page_growth = page_growth if kv_layout == "paged" else "eager"
+        self.admit_headroom = float(admit_headroom)
+        # top-ups cover this many chunks ahead (capped at the request's
+        # admission-time bound) so a long decode pays one grow acquire
+        # per lookahead window, not per chunk; shrinks to one chunk when
+        # the pool is under the headroom watermark
+        self.page_lookahead_chunks = max(int(page_lookahead_chunks), 1)
 
         if kv_layout == "paged":
             self.pool = PagedSlotPool(
                 model, capacity, max_len, page_size=page_size,
                 num_pages=num_pages, max_pages_per_slot=max_pages_per_slot,
-                sync=self.sync,
+                sync=self.sync, wait_mode=allocator_wait,
                 expected_contention=allocator_contention(
                     capacity, service_steps=float(max_len)))
         else:
@@ -200,10 +252,18 @@ class SlotServeEngine:
         self.grant_log: List[int] = []                 # rids in grant order
         self.step_clock = 0
         self.decode_dispatches = 0
+        self.pauses = 0          # slot-rounds a lazy top-up had to wait
+        self.preemptions = 0     # lazy-overflow evictions (restart victims)
 
         self._next_rid = 0
         self._last_tok = np.zeros(capacity, np.int32)
         self._steps_left = np.zeros(capacity, np.int64)
+        # the slot's lazy top-up cap: the exact flat positions its
+        # request can touch (prompt + max_new - 1 — the last decode
+        # writes at position len = prompt+max_new-2 and attends one
+        # past it), NOT the eager reserve's +1 slack; chunk-tail writes
+        # beyond it drop at the sentinel
+        self._grow_cap = np.zeros(capacity, np.int64)
         self._key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("pad_to",))
@@ -314,21 +374,54 @@ class SlotServeEngine:
         # the submit() check, and _pad_cache cannot pad to less than s
         return min(b, self.pool.virtual_max_len)
 
+    def _headroom_pages(self) -> int:
+        """Admission watermark in pages: keep this many pages free for
+        in-flight top-ups when admitting under lazy growth."""
+        return int(np.ceil(self.admit_headroom * self.pool.pages.num_pages))
+
     def _admit(self) -> int:
+        """Admit the FIFO front the Algorithm-5 timeline grants now.
+
+        Page grants for the whole admission batch go through ONE
+        allocator critical section (``reserve_batch``): staging first
+        decides and acquires slots, then the batch allocs, then each
+        request prefills into its pre-granted pages. Under lazy growth
+        the initial grant is just the prefill bucket — the worst case is
+        only page-*bounded*, not reserved — and the gate is the headroom
+        watermark instead of ``can_reserve(worst_case)``.
+        """
         n_admit = self._planned_admit_count()
-        admitted = 0
-        while admitted < n_admit and self.queue and self.pool.n_free:
+        staged = []                # (req, slot, lp, bucket, reserve, grant)
+        staged_pages = 0
+        lazy = self.kv_layout == "paged" and self.page_growth == "lazy"
+        while len(staged) < n_admit and self.queue and self.pool.n_free:
             req = self.queue[0]
             lp = int(req.prompt.size)
             bucket = self._bucket_len(lp)
-            # the paged pool reserves every page the request may ever
-            # touch at insert (so decode never allocates mid-dispatch);
-            # when the arena can't cover that, the FIFO head waits for
-            # retirements to reclaim pages — later requests do not jump it
+            # worst-case flat positions (prompt bucket ∪ prompt+new+1):
+            # reserved now under eager growth (decode never allocates
+            # mid-dispatch), merely bounded under lazy growth. Either
+            # way a page-starved FIFO head waits for retirements to
+            # reclaim pages — later requests do not jump it.
             reserve = max(bucket, lp + req.max_new_tokens + 1)
-            if (self.kv_layout == "paged"
-                    and not self.pool.can_reserve(reserve)):
-                break
+            # lazy initial grant: the prefill bucket plus the first
+            # lookahead window, never past what the request can actually
+            # touch — short requests only ever hold pages they can fill
+            need = max(lp + req.max_new_tokens - 1, lp)
+            grant = (max(bucket,
+                         min(bucket + self.decode_chunk
+                             * self.page_lookahead_chunks, need))
+                     if lazy else reserve)
+            if self.kv_layout == "paged":
+                fits = (self.pool.can_admit_lazy(
+                            grant, reserve,
+                            headroom_pages=self._headroom_pages(),
+                            pending_pages=staged_pages)
+                        if lazy else
+                        self.pool.can_reserve(
+                            reserve, pending_pages=staged_pages))
+                if not fits:
+                    break
             self.queue.pop(0)
             # Algorithm-5 wait(): never blocks here because the kernel
             # only granted as many requests as there are free slots —
@@ -337,6 +430,22 @@ class SlotServeEngine:
                 self.queue.insert(0, req)
                 break
             slot = self.pool.acquire(req.rid)
+            staged.append((req, slot, lp, bucket, reserve, grant))
+            if self.kv_layout == "paged":
+                staged_pages += self.pool.pages.pages_for(grant)
+        if not staged:
+            return 0
+
+        # one allocator critical section for the whole admission batch
+        if self.kv_layout == "paged":
+            grants = self.pool.reserve_batch(
+                [(slot, grant) for (_, slot, _, _, _, grant) in staged])
+        else:
+            grants = [None] * len(staged)
+
+        instant = []               # eos/0-budget on the prefill token
+        for (req, slot, lp, bucket, reserve, grant), ids in zip(staged,
+                                                                grants):
             padded = np.zeros(bucket, np.int32)
             padded[:lp] = req.prompt
             length = (jnp.asarray([lp], jnp.int32)
@@ -346,43 +455,142 @@ class SlotServeEngine:
                 pad_to=bucket if self.kv_layout == "paged" else self.max_len)
             self._key, sub = jax.random.split(self._key)
             tok0 = int(self._sample(logits, sub)[0])
-            self.pool.insert(slot, cache, lp, reserve=reserve)
+            if self.kv_layout == "paged":
+                self.pool.insert(slot, cache, lp, reserve=grant, ids=ids)
+            else:
+                self.pool.insert(slot, cache, lp, reserve=reserve)
             self._last_tok[slot] = tok0
             self._steps_left[slot] = req.max_new_tokens - 1
+            self._grow_cap[slot] = max(lp + req.max_new_tokens - 1, lp)
             req.slot = slot
-            req.grant_step = self.step_clock
-            req.grant_s = time.perf_counter()
+            if req.preemptions == 0 or req.grant_step < 0:
+                # a preempted request was already granted once: its FIFO
+                # log entry and wait-time stats belong to that grant
+                req.grant_step = self.step_clock
+                req.grant_s = time.perf_counter()
+                self.grant_log.append(req.rid)
             req.out_tokens.append(tok0)
             if self.eos_id is not None and tok0 == self.eos_id:
                 req.eos = True
             self.active[slot] = req
-            self.grant_log.append(req.rid)
-            admitted += 1
             if req.eos or self._steps_left[slot] <= 0:
-                self._retire(slot, offset=0)
-        return admitted
+                instant.append((slot, 0))
+        self._retire_batch(instant)
+        return len(staged)
+
+    def _retire_batch(self, pairs: List[Tuple[int, int]]) -> None:
+        """Retire ``(slot, step_offset)`` pairs; under the paged layout
+        every retirement's pages return in ONE allocator critical
+        section (deferred-free eviction)."""
+        deferred = []
+        for slot, offset in pairs:
+            req = self.active.pop(slot)
+            req.finish_step = self.step_clock + offset
+            req.finish_s = time.perf_counter()
+            self._steps_left[slot] = 0
+            if self.kv_layout == "paged":
+                held = self.pool.evict(slot, free_pages=False)
+                if held is not None and held.size:
+                    deferred.append(held)
+            else:
+                self.pool.evict(slot)
+            self.admission.release_slot()
+            self.finished.append(req)
+        if deferred:
+            self.pool.pages.free_batch(deferred)
 
     def _retire(self, slot: int, offset: int) -> None:
+        self._retire_batch([(slot, offset)])
+
+    # --------------------------------------------------- lazy page growth
+    def _preempt(self, slot: int) -> None:
+        """Lazy-overflow eviction: kick the youngest grant back to the
+        queue front, reclaiming its pages so older slots can grow. The
+        victim restarts from its prompt on re-admission (greedy decoding
+        regenerates the identical stream); its original grant keeps the
+        FIFO log entry and wait stats."""
         req = self.active.pop(slot)
-        req.finish_step = self.step_clock + offset
-        req.finish_s = time.perf_counter()
-        self._steps_left[slot] = 0
-        self.pool.evict(slot)
+        self.pool.evict(slot)                  # immediate free: rare path
         self.admission.release_slot()
-        self.finished.append(req)
+        self._steps_left[slot] = 0
+        self._grow_cap[slot] = 0
+        req.slot = -1
+        req.eos = False
+        req.out_tokens = []
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.insert(0, req)              # FIFO: it predates the queue
+
+    def _grow_for_chunk(self, steps: int) -> set:
+        """Lazy growth's per-round top-up pass: ONE allocator critical
+        section tops every active slot up to the pages this chunk's
+        writes and reads need (capped at the admission-time worst case).
+
+        Grants go oldest-grant-first; when the pool cannot cover a
+        slot's top-up it *pauses* for the round (frozen row: emits
+        nothing, its length rolls back after the dispatch). If nobody
+        can decode — the overflow case over-commit admission makes
+        possible — the youngest grant is evicted back to the queue
+        (eviction-safe: restart, not corruption) until someone can.
+        Returns the set of paused slots; at least one active slot is
+        always decodable on return.
+        """
+        if not self.active or self.page_growth != "lazy":
+            return set()
+        ps = self.pool.page_size
+        lens = np.asarray(self.pool.lens)
+        order = sorted(self.active, key=lambda s: self.active[s].rid)
+        while order:
+            # prefetch a lookahead window per grow acquire; fall back to
+            # just-this-chunk when the pool is under the watermark so a
+            # speculative grant never starves a must-have one
+            tight = self.pool.pages.n_free <= self._headroom_pages()
+            horizon = steps * (1 if tight else self.page_lookahead_chunks)
+            items = [(s, int(min(lens[s] + horizon, self._grow_cap[s])))
+                     for s in order]
+            self.pool.grow_batch(items)
+            # a slot pauses only when it cannot cover THIS chunk (a
+            # denied lookahead tail is not a reason to stall the row)
+            paused = {
+                s for s in order
+                if self.pool.held_pages(s) * ps
+                < min(lens[s] + steps, self._grow_cap[s])}
+            if len(paused) < len(order):
+                self.pauses += len(paused)
+                return paused
+            # a lone slot can always grow (held + need <= max_pages_per_
+            # slot <= num_pages), so preemption strictly shrinks the
+            # starved set and the loop terminates
+            victim = max(order, key=lambda s: self.active[s].rid)
+            self._preempt(victim)
+            order.remove(victim)
+        return set()
 
     # ------------------------------------------------------------ decode loop
     def step(self) -> int:
-        """One scheduler round: admit per the kernel plan, then one
-        fixed-shape decode dispatch of ``decode_chunk`` tokens. Returns
+        """One scheduler round: re-tune the allocator's wait strategy
+        from measured contention, admit per the kernel plan (one
+        batched page grant), lazily top up active slots (one batched
+        grant), then one fixed-shape decode dispatch of ``decode_chunk``
+        tokens, then retire finished rows (one batched free). Returns
         the number of still-active requests."""
+        if self.kv_layout == "paged":
+            # between rounds, never mid-critical-section (the adaptive
+            # mutex contract); a no-op for pinned/auto wait modes
+            self.pool.retune()
         self._admit()
         if not self.active:
             return 0
         steps = self.decode_chunk
+        paused = (self._grow_for_chunk(steps)
+                  if self.kv_layout == "paged" else set())
+        if not self.active:                    # everything preempted away
+            return 0
         frozen = np.ones(self.capacity, bool)
         for slot in self.active:
-            frozen[slot] = False
+            if slot not in paused:
+                frozen[slot] = False
+        lens_before = np.asarray(self.pool.lens) if paused else None
         self._key, sub = jax.random.split(self._key)
         cache, tok, toks = self._chunk(
             self.params, self.pool.cache_view(),
@@ -392,8 +600,19 @@ class SlotServeEngine:
         self.pool.adopt(cache)
         self._last_tok = np.array(tok)     # writable copy (inserts mutate)
         toks = np.asarray(toks)                        # [steps, K]
+        if paused:
+            # roll paused rows' lengths back: their frozen-token scatters
+            # land again (identically) on resume before anything reads
+            # them, so the length vector is the only state to rewind
+            lens = np.array(self.pool.lens)
+            idx = list(paused)
+            lens[idx] = lens_before[idx]
+            self.pool.set_lens(jnp.asarray(lens))
 
+        retire: List[Tuple[int, int]] = []
         for slot in list(self.active):
+            if slot in paused:
+                continue
             req = self.active[slot]
             done_at = None
             for s in range(steps):
@@ -409,7 +628,8 @@ class SlotServeEngine:
                 if self._steps_left[slot] <= 0:
                     done_at = s + 1
             if done_at is not None:
-                self._retire(slot, offset=done_at)
+                retire.append((slot, done_at))
+        self._retire_batch(retire)
         self.step_clock += steps
         return len(self.active)
 
@@ -442,10 +662,28 @@ class SlotServeEngine:
         }
         if self.kv_layout == "paged":
             pp = self.pool.pages
+            ls = pp.lock_stats()
             out.update({
                 "page_allocs": float(pp.allocs),
                 "page_frees": float(pp.frees),
                 "pages_peak_in_use": float(pp.peak_in_use),
                 "pages_total": float(pp.num_pages),
+                "page_pauses": float(self.pauses),
+                "page_preemptions": float(self.preemptions),
+                # the paper's currency: synchronizing ops on the
+                # allocator per unit of useful work
+                "lock_acquires": float(ls["acquires"]),
+                "lock_contended_acquires": float(ls["contended_acquires"]),
+                "lock_held_s": float(ls["held_s"]),
+                "lock_acquires_per_token": (
+                    float(ls["acquires"]) / float(max(toks, 1))),
+                "lock_retunes": float(ls.get("retunes", 0)),
+                # what a one-lock-per-page allocator (the PR 3 baseline
+                # framing) would have paid for the same page traffic
+                "per_page_lock_acquires": float(
+                    pp.pages_alloced + pp.pages_freed),
+                "per_page_lock_acquires_per_token": (
+                    float(pp.pages_alloced + pp.pages_freed)
+                    / float(max(toks, 1))),
             })
         return out

@@ -11,13 +11,18 @@ replica will ever serve. This module replaces that reservation with a
     page ids, sentinel-filled past the slot's allocation — mapping flat
     token positions to (page, offset) pairs;
   * ``PagePool`` — the O(1) FIFO free-list allocator those tables draw
-    from. Page allocation/reclamation happen on the serve hot loop (one
-    allocator critical section per admission and per retirement), so the
-    allocator is gated by a ``repro.sync`` ticket-lock mutex — the
+    from. Page allocation/reclamation happen on the serve hot loop, so
+    the allocator is gated by a ``repro.sync`` ticket-lock mutex — the
     paper's Algorithm-3 FA lock: one atomic to acquire, zero to release,
-    FIFO-fair so a burst of admissions cannot starve a retirement. The
+    FIFO-fair so a burst of admissions cannot starve a retirement — and
+    every entry point is *batched*: one critical section per scheduler
+    round covers a whole admission batch (``alloc_batch``), growth pass
+    (``PagedSlotPool.grow_batch``), or retirement set (``free_batch``),
+    so lock traffic is O(1) per round, not O(requests) or O(pages). The
     wait strategy comes from ``select_impl`` under the expected allocator
-    contention (DESIGN.md §9).
+    contention, can be pinned per-arm (``wait_mode``), or adapts to the
+    measured contended-acquire window (``wait_mode="adaptive"``,
+    re-selected between rounds). See DESIGN.md §9-§10.
 
 ``PagedSlotPool`` is a drop-in for ``SlotPool`` (same
 ``acquire/insert/evict/cache_view/adopt/set_lens`` surface), so
@@ -35,13 +40,13 @@ views stay in position order and reuse the contiguous masking.
 from __future__ import annotations
 
 import collections
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abstraction import PrimitiveKind
+from repro.core.abstraction import PrimitiveKind, WaitStrategy
 from repro.serve.kv_slots import _split_len, batch_axes
 from repro.sync import SyncLibrary
 
@@ -52,40 +57,89 @@ class PagePoolExhausted(RuntimeError):
     """alloc() asked for more pages than the free list holds."""
 
 
+class PageLeakError(RuntimeError):
+    """free() of a page the pool does not hold as allocated.
+
+    Freeing an already-free (or out-of-range, or twice-in-one-batch)
+    page would push a duplicate onto the FIFO free list, and the next
+    two allocations would hand the *same physical page* to two slots —
+    silent KV corruption discovered only when token streams diverge.
+    The allocator refuses atomically instead: every id in the batch is
+    validated before any page is returned.
+    """
+
+
+#: wait_mode name -> pinned ticket-lock wait strategy ("auto"/None defer
+#: to ``select_impl``; "adaptive" re-selects from measured contention).
+_WAIT_MODES = {
+    "spin": WaitStrategy.SPIN,
+    "spin_backoff": WaitStrategy.SPIN_BACKOFF,
+    "sleeping": WaitStrategy.SLEEP,
+}
+
+
 class PagePool:
     """Fixed page arena bookkeeping: FIFO free list under a ticket mutex.
 
     The free list itself is trivially O(1); what matters (the paper's
     lesson) is how few synchronizing accesses each acquire of the
-    guarding mutex needs. ``alloc``/``free`` are the only entry points
-    and both take the lock, so the critical section *is* the allocator.
-    ``grant_log`` records the tag of every allocation in lock-grant
-    order — the ticket lock makes that order FIFO in ticket order, which
-    the churn tests pin.
+    guarding mutex needs. ``alloc_batch``/``free_batch`` are the entry
+    points and each takes the lock *once for a whole batch of requests*,
+    so allocator lock traffic is O(1) per engine event (one critical
+    section per scheduler round), not O(requests) — and never O(pages).
+    ``grant_log`` records the tag of every granted request in lock-grant
+    order — the ticket lock makes that order FIFO in ticket order, and a
+    batch appends its grants in batch order, which the churn and
+    equivalence tests pin.
+
+    ``wait_mode`` picks how the allocator's waiters wait:
+
+      * ``None``/``"auto"`` — the strategy ``select_impl`` derives from
+        ``expected_contention`` (PR 3 behavior);
+      * ``"spin"`` / ``"spin_backoff"`` / ``"sleeping"`` — pinned (the
+        ``--alloc-sweep`` benchmark arms);
+      * ``"adaptive"`` — a contention-adaptive ticket lock
+        (``hostsync.AdaptiveMutex``) that re-selects its strategy from
+        the measured contended-acquire fraction whenever the owner calls
+        :meth:`retune` — between scheduler rounds, never mid-critical-
+        section.
     """
 
     def __init__(self, num_pages: int, page_size: int, *,
                  sync: Optional[SyncLibrary] = None,
-                 expected_contention: float = 0.25):
+                 expected_contention: float = 0.25,
+                 wait_mode: Optional[str] = None):
         if num_pages < 1 or page_size < 1:
             raise ValueError("num_pages and page_size must be >= 1")
+        if wait_mode not in (None, "auto", "adaptive", *_WAIT_MODES):
+            raise ValueError(
+                f"unknown wait_mode {wait_mode!r}; expected auto, adaptive, "
+                f"or one of {sorted(_WAIT_MODES)}")
         self.num_pages = num_pages
         self.page_size = page_size
         self.sync = sync if sync is not None else SyncLibrary.host_default()
         self.choice = self.sync.choice(
             PrimitiveKind.MUTEX, expected_contention=expected_contention)
+        self.wait_mode = wait_mode or "auto"
         # Algorithm-3 ticket lock; strategy per the machine abstraction's
-        # read of the expected allocator contention. A library-level
-        # strategy pin overrides the selection exactly as it does inside
-        # ``SyncLibrary.mutex`` — report ``wait_strategy``, not
-        # ``choice.strategy``, as what the allocator actually runs.
-        self.wait_strategy = self.sync.strategy or self.choice.strategy
-        self.mutex = self.sync.mutex(
-            kind="ticket", expected_contention=expected_contention)
+        # read of the expected allocator contention unless pinned by
+        # ``wait_mode`` or a library-level strategy pin — report
+        # ``wait_strategy`` (below), not ``choice.strategy``, as what the
+        # allocator actually runs right now.
+        if self.wait_mode == "adaptive":
+            self.mutex = self.sync.mutex(
+                kind="adaptive", expected_contention=expected_contention)
+        else:
+            self.mutex = self.sync.mutex(
+                kind="ticket", expected_contention=expected_contention,
+                strategy=_WAIT_MODES.get(self.wait_mode))
         self._free = collections.deque(range(num_pages))
         self._allocated = np.zeros(num_pages, bool)
-        self.allocs = 0
-        self.frees = 0
+        self.allocs = 0          # granted requests (grant_log entries)
+        self.frees = 0           # free events (one per returned group)
+        self.pages_alloced = 0   # pages moved out of the free list
+        self.pages_freed = 0     # pages moved back — with pages_alloced,
+        #                          the "one lock per page" baseline ledger
         self.peak_in_use = 0
         self.grant_log: List[Any] = []
 
@@ -98,45 +152,150 @@ class PagePool:
     def in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    @property
+    def wait_strategy(self) -> WaitStrategy:
+        """The wait strategy the allocator's mutex runs *right now*
+        (adaptive mode re-selects it between scheduler rounds)."""
+        s = getattr(self.mutex, "strategy", None)      # AdaptiveMutex
+        if isinstance(s, WaitStrategy):
+            return s
+        return getattr(self.mutex, "_strategy",
+                       self.sync.strategy or self.choice.strategy)
+
     def pages_for(self, tokens: int) -> int:
         """Pages needed to hold ``tokens`` flat positions."""
         return -(-max(int(tokens), 0) // self.page_size)
 
     # ------------------------------------------------------------- hot path
+    def alloc_batch(self, counts: Sequence[int], tags: Optional[Sequence] = None,
+                    *, partial: bool = False) -> List[Optional[np.ndarray]]:
+        """Grant a batch of page requests under ONE critical section.
+
+        ``counts[i]`` pages go to request ``i`` (FIFO page-reuse order,
+        requests granted in batch order). With ``partial=False`` the
+        batch is all-or-nothing: :class:`PagePoolExhausted` is raised
+        without granting anything when the total does not fit. With
+        ``partial=True`` the FIFO *prefix* of requests that fits is
+        granted and every request from the first unsatisfiable one on
+        gets ``None`` — later (smaller) requests never leapfrog an
+        earlier starved one, so growth stays starvation-free in request
+        order. Each granted request appends its tag to ``grant_log``.
+        """
+        counts = [int(n) for n in counts]
+        if any(n < 0 for n in counts):
+            raise ValueError("alloc of negative page count")
+        if tags is None:
+            tags = [None] * len(counts)
+        if len(tags) != len(counts):
+            raise ValueError("tags and counts length mismatch")
+        out: List[Optional[np.ndarray]] = []
+        with self.mutex:
+            if not partial and sum(counts) > len(self._free):
+                raise PagePoolExhausted(
+                    f"need {sum(counts)} pages, {len(self._free)} free of "
+                    f"{self.num_pages}")
+            starved = False
+            for n, tag in zip(counts, tags):
+                if starved or n > len(self._free):
+                    starved = True          # FIFO prefix only
+                    out.append(None)
+                    continue
+                ids = np.asarray([self._free.popleft() for _ in range(n)],
+                                 np.int32)
+                self._allocated[ids] = True
+                self.allocs += 1
+                self.pages_alloced += n
+                self.grant_log.append(tag)
+                out.append(ids)
+            self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return out
+
     def alloc(self, n: int, tag: Any = None) -> np.ndarray:
-        """Claim ``n`` pages (FIFO reuse order). Raises
+        """Claim ``n`` pages (FIFO reuse order) — a batch of one. Raises
         :class:`PagePoolExhausted` without allocating when fewer than
         ``n`` are free — callers gate admission on ``n_free`` first."""
-        if n < 0:
-            raise ValueError("alloc of negative page count")
+        return self.alloc_batch([n], [tag])[0]
+
+    def free_batch(self, groups: Sequence) -> None:
+        """Return several requests' pages under ONE critical section.
+
+        Failure is atomic across the whole batch: every id in every
+        group is validated (in range, currently allocated, not repeated
+        anywhere in the batch) before any page is returned; violations
+        raise :class:`PageLeakError`. Each group counts as one free
+        event (``frees``), mirroring ``alloc_batch``'s per-request
+        grant accounting.
+        """
+        groups = [np.asarray(g, np.int32).reshape(-1) for g in groups]
         with self.mutex:
-            if n > len(self._free):
-                raise PagePoolExhausted(
-                    f"need {n} pages, {len(self._free)} free of "
-                    f"{self.num_pages}")
-            ids = np.asarray([self._free.popleft() for _ in range(n)],
-                             np.int32)
-            self._allocated[ids] = True
-            self.allocs += 1
-            self.peak_in_use = max(self.peak_in_use, self.in_use)
-            self.grant_log.append(tag)
-        return ids
+            seen = set()
+            for g in groups:
+                for i in g.tolist():
+                    if not (0 <= i < self.num_pages):
+                        raise PageLeakError(
+                            f"freeing page {i} outside the arena "
+                            f"[0, {self.num_pages})")
+                    if not self._allocated[i]:
+                        raise PageLeakError(
+                            f"freeing page {i} which is already free — "
+                            f"double-free would duplicate it on the FIFO "
+                            f"free list and alias two slots onto one page")
+                    if i in seen:
+                        raise PageLeakError(
+                            f"page {i} appears twice in one free batch")
+                    seen.add(i)
+            for g in groups:
+                for i in g.tolist():
+                    self._allocated[i] = False
+                    self._free.append(i)
+                self.frees += 1
+                self.pages_freed += int(g.size)
 
     def free(self, ids) -> None:
-        """Return pages to the tail of the free list. Like ``alloc``,
-        failure is atomic: every id is validated before any is freed."""
-        ids = np.asarray(ids, np.int32).reshape(-1)
-        with self.mutex:
-            for i in ids:
-                i = int(i)
-                if not (0 <= i < self.num_pages) or not self._allocated[i]:
-                    raise RuntimeError(f"freeing unallocated page {i}")
-            if len(set(ids.tolist())) != ids.size:
-                raise RuntimeError("freeing a page twice in one call")
-            for i in ids:
-                self._allocated[i] = False
-                self._free.append(int(i))
-            self.frees += 1
+        """Return pages to the tail of the free list — a batch of one."""
+        self.free_batch([ids])
+
+    # ----------------------------------------------------- contention signal
+    def observed_contention(self) -> float:
+        """Contended fraction of the allocator's recent lock acquires
+        (sliding window kept by the instrumented host mutexes)."""
+        fn = getattr(self.mutex, "recent_contention", None)
+        return float(fn()) if fn is not None else 0.0
+
+    def retune(self) -> Optional[WaitStrategy]:
+        """Adaptive mode: re-select the wait strategy from the measured
+        contention window. Call between scheduler rounds (never while
+        the critical section is held by the caller). No-op — returns
+        ``None`` — for pinned/auto modes."""
+        retune = getattr(self.mutex, "retune", None)
+        if retune is None:
+            return None
+        return retune(self.observed_contention())
+
+    def reset_stats(self) -> None:
+        """Zero allocation and lock counters (benchmarks reset after
+        their warm phase; the free list itself is untouched)."""
+        self.allocs = 0
+        self.frees = 0
+        self.pages_alloced = 0
+        self.pages_freed = 0
+        self.peak_in_use = self.in_use
+        self.grant_log.clear()
+        fn = getattr(self.mutex, "reset_stats", None)
+        if fn is not None:
+            fn()
+
+    def lock_stats(self) -> dict:
+        """Acquire/contended-acquire/held-time counters of the guarding
+        mutex, plus the strategy currently in effect."""
+        fn = getattr(self.mutex, "lock_stats", None)
+        st = dict(fn()) if fn is not None else {}
+        st.setdefault("acquires", 0)
+        st.setdefault("contended_acquires", 0)
+        st.setdefault("held_s", 0.0)
+        st["strategy"] = self.wait_strategy.value
+        st["wait_mode"] = self.wait_mode
+        return st
 
     # ------------------------------------------------------------ invariants
     def check(self) -> None:
@@ -170,7 +329,8 @@ class PagedSlotPool:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  max_pages_per_slot: Optional[int] = None,
                  sync: Optional[SyncLibrary] = None,
-                 expected_contention: float = 0.25):
+                 expected_contention: float = 0.25,
+                 wait_mode: Optional[str] = None):
         if capacity < 1:
             raise ValueError("slot pool capacity must be >= 1")
         self.capacity = capacity
@@ -179,7 +339,8 @@ class PagedSlotPool:
         if num_pages is None:
             num_pages = -(-capacity * max_len // page_size)
         self.pages = PagePool(num_pages, page_size, sync=sync,
-                              expected_contention=expected_contention)
+                              expected_contention=expected_contention,
+                              wait_mode=wait_mode)
         if max_pages_per_slot is None:
             max_pages_per_slot = -(-2 * max_len // page_size)
         self.max_pages_per_slot = min(max_pages_per_slot, num_pages)
@@ -246,25 +407,104 @@ class PagedSlotPool:
         self._rid[slot] = rid
         return slot
 
-    def evict(self, slot: int) -> None:
-        """Retire a slot: reclaim its pages (one allocator critical
-        section), reset its table row to sentinel."""
+    def evict(self, slot: int, *, free_pages: bool = True
+              ) -> Optional[np.ndarray]:
+        """Retire a slot and reset its table row to sentinel.
+
+        ``free_pages=True`` reclaims its pages immediately (one allocator
+        critical section). ``free_pages=False`` *defers* the reclaim and
+        returns the held page ids instead — the engine collects a whole
+        scheduler round's retirements and returns them in one
+        ``pages.free_batch`` critical section (the batched-free half of
+        the O(1)-lock-traffic contract)."""
         if self._rid[slot] is None:
             raise RuntimeError(f"evicting free slot {slot}")
         held = self._tables[slot][self._tables[slot] < self.pages.num_pages]
-        if held.size:
-            self.pages.free(held)
         self._tables[slot] = self.pages.num_pages
         self._rid[slot] = None
         self._free.append(slot)
+        if free_pages:
+            if held.size:
+                self.pages.free(held)
+            return None
+        return held
 
     # ------------------------------------------------------------- admission
-    def can_reserve(self, tokens: int) -> bool:
+    def can_reserve(self, tokens: int, pending_pages: int = 0) -> bool:
         """Whether an insert reserving ``tokens`` flat positions can be
         satisfied right now (admission gates on this *before* taking the
-        slot semaphore, so head-of-line blocking stays FIFO)."""
+        slot semaphore, so head-of-line blocking stays FIFO).
+        ``pending_pages`` accounts for grants already staged in the same
+        admission batch but not yet allocated."""
         n = self.pages.pages_for(tokens)
-        return n <= self.max_pages_per_slot and n <= self.pages.n_free
+        return (n <= self.max_pages_per_slot
+                and n + max(int(pending_pages), 0) <= self.pages.n_free)
+
+    def can_admit_lazy(self, initial_tokens: int, total_tokens: int,
+                       headroom_pages: int = 0,
+                       pending_pages: int = 0) -> bool:
+        """Lazy-growth admission gate: only the *initial* grant (the
+        prefill bucket) must fit now, plus a configurable headroom so
+        admissions do not starve in-flight slots' top-ups; the
+        worst-case ``total_tokens`` only has to respect the per-slot
+        page bound (it is never reserved up front). ``pending_pages``
+        accounts for grants staged earlier in the same admission batch.
+        An empty pool (nothing active, nothing staged) waives the
+        headroom — the sole request always fits by the per-slot bound
+        and waiting would deadlock."""
+        need_total = self.pages.pages_for(total_tokens)
+        if need_total > self.max_pages_per_slot:
+            return False
+        need_now = (self.pages.pages_for(initial_tokens)
+                    + max(int(pending_pages), 0))
+        if self.n_active == 0 and pending_pages == 0:
+            return need_now <= self.pages.n_free
+        return need_now + max(int(headroom_pages), 0) <= self.pages.n_free
+
+    def held_pages(self, slot: int) -> int:
+        """Pages currently mapped by ``slot``'s block table."""
+        return int((self._tables[slot] < self.pages.num_pages).sum())
+
+    def grow_batch(self, items: Sequence[Tuple[int, int]]) -> List[bool]:
+        """Top up several slots to cover ``need_tokens`` flat positions
+        each, under ONE allocator critical section.
+
+        ``items`` is ``[(slot, need_tokens), ...]`` in the engine's FIFO
+        (oldest-grant-first) order; the allocator grants the FIFO prefix
+        that fits (``alloc_batch(partial=True)``), so a starved old slot
+        is never leapfrogged by a younger one. Returns one bool per
+        item: True when the slot now covers ``need_tokens`` (including
+        "already did"), False when its top-up must wait for reclaimed
+        pages. Raises when a slot would outgrow ``max_pages_per_slot`` —
+        callers cap their need at the insert-time reserve, which
+        admission already bounded.
+        """
+        plan = []                     # (idx, slot, held, extra)
+        ok = [True] * len(items)
+        for idx, (slot, need_tokens) in enumerate(items):
+            if self._rid[slot] is None:
+                raise RuntimeError(f"growing free slot {slot}")
+            need = self.pages.pages_for(need_tokens)
+            if need > self.max_pages_per_slot:
+                raise ValueError(
+                    f"slot {slot} growth to {need_tokens} tokens needs "
+                    f"{need} pages > max_pages_per_slot "
+                    f"{self.max_pages_per_slot}")
+            held = self.held_pages(slot)
+            if need > held:
+                plan.append((idx, slot, held, need - held))
+        if not plan:
+            return ok
+        grants = self.pages.alloc_batch(
+            [extra for (_, _, _, extra) in plan],
+            [self._rid[slot] for (_, slot, _, _) in plan],
+            partial=True)
+        for (idx, slot, held, _), ids in zip(plan, grants):
+            if ids is None:
+                ok[idx] = False
+                continue
+            self._tables[slot, held:held + ids.size] = ids
+        return ok
 
     # --------------------------------------------------------------- device
     def _insert_impl(self, arena, lens, req, ids, slot, length):
@@ -289,19 +529,44 @@ class PagedSlotPool:
         return (jax.tree_util.tree_unflatten(self._treedef, out),
                 lens.at[slot].set(length))
 
-    def insert(self, slot: int, req_cache: PyTree, length,
-               reserve: Optional[int] = None) -> None:
-        """Scatter a prefilled batch-1 request cache into ``slot``'s
-        pages, allocating them now (one allocator critical section).
+    def reserve_batch(self, items: Sequence[Tuple[int, int]]
+                      ) -> List[np.ndarray]:
+        """Pre-grant ``[(slot, reserve_tokens), ...]`` in ONE allocator
+        critical section, for handing to :meth:`insert` via ``ids=``.
+        All-or-nothing (admission already gated on the pool state); the
+        grant log gets one entry per request, in batch order — exactly
+        what a per-request ``alloc`` loop would have produced, minus the
+        per-request lock acquisitions."""
+        counts = []
+        for slot, tokens in items:
+            n = self.pages.pages_for(tokens)
+            if n > self.max_pages_per_slot:
+                raise ValueError(
+                    f"reserve {tokens} needs {n} pages > "
+                    f"max_pages_per_slot {self.max_pages_per_slot}")
+            counts.append(n)
+        return self.pages.alloc_batch(
+            counts, [self._rid[slot] for slot, _ in items])
 
-        ``reserve`` is the total flat positions the request may ever
-        occupy (prompt + generation); all of its pages are claimed here,
-        so decode never allocates mid-dispatch and cannot deadlock on an
-        empty pool. When omitted it defaults to a full ``max_len`` row —
-        the contiguous layout's guarantee, so SlotPool-style callers can
-        never silently outgrow their pages. Prefill data covers the
-        first ``ceil(S/ps)`` pages; the remainder hold stale bytes
-        masked by the length vector until decode writes them.
+    def insert(self, slot: int, req_cache: PyTree, length,
+               reserve: Optional[int] = None,
+               ids: Optional[np.ndarray] = None) -> None:
+        """Scatter a prefilled batch-1 request cache into ``slot``'s
+        pages.
+
+        ``reserve`` is the flat positions claimed *at insert*: the
+        worst-case total (prompt + generation) under eager growth — so
+        decode never allocates mid-dispatch — or just the prefill bucket
+        under lazy growth, whose top-ups arrive per decode chunk via
+        :meth:`grow_batch`. When omitted it defaults to a full
+        ``max_len`` row — the contiguous layout's guarantee, so
+        SlotPool-style callers can never silently outgrow their pages.
+        ``ids`` hands in pages pre-granted by :meth:`reserve_batch`
+        (one critical section for a whole admission batch); when absent
+        the insert allocates its own (one critical section). Prefill
+        data covers the first ``ceil(S/ps)`` pages; any remainder holds
+        stale bytes masked by the length vector until decode writes
+        them.
         """
         lr = jax.tree_util.tree_leaves(_split_len(req_cache)[0])
         s = 0
@@ -317,13 +582,27 @@ class PagedSlotPool:
                 f"reserve {reserve} needs {n_alloc} pages > "
                 f"max_pages_per_slot {self.max_pages_per_slot}")
         n_data = self.pages.pages_for(s)
-        ids = self.pages.alloc(n_alloc, tag=self._rid[slot])
+        if ids is None:
+            ids = self.pages.alloc(n_alloc, tag=self._rid[slot])
+        else:
+            ids = np.asarray(ids, np.int32).reshape(-1)
+            if ids.size < n_data:
+                raise ValueError(
+                    f"pre-granted {ids.size} pages cannot hold the "
+                    f"{n_data}-page prefill")
+            n_alloc = ids.size
         self._tables[slot, :n_alloc] = ids
         self._tables[slot, n_alloc:] = self.pages.num_pages
         req, _ = _split_len(req_cache)
         self.arena, self.lens = self._insert_jit(
             self.arena, self.lens, req, jnp.asarray(ids[:n_data]),
             jnp.asarray(slot, jnp.int32), jnp.asarray(length, jnp.int32))
+
+    # ----------------------------------------------------- contention signal
+    def retune(self) -> Optional[Any]:
+        """Adaptive wait mode: re-select the allocator's wait strategy
+        from measured contention (between scheduler rounds)."""
+        return self.pages.retune()
 
     def cache_view(self) -> PyTree:
         """Model-cache form: arena leaves + 'len' vector + block table."""

@@ -44,20 +44,28 @@ def plan_admission(arrivals_s: np.ndarray, service_s: np.ndarray,
                               backend=lib.planning_backend_name())
 
 
-def allocator_contention(capacity: int, service_steps: float) -> float:
+def allocator_contention(capacity: int, service_steps: float,
+                         round_events: float = 3.0) -> float:
     """Expected contention on the KV page allocator's mutex, for
     ``select_impl``'s wait-strategy relaxation (paper Section 6).
 
-    The allocator is entered once per admission and once per retirement,
-    i.e. about ``2K / service`` critical sections per decode step from K
-    concurrent slots; the contention fraction is that entrant rate per
-    participant. Long-lived requests (service >> 2) make the allocator a
+    Since the batched-allocation rework (DESIGN.md §10) the allocator is
+    entered at most ``round_events`` times per scheduler round — one
+    admission grant, one growth top-up, one retirement reclaim — no
+    matter how many requests or pages the round moves, so the entrant
+    rate per participant is ``round_events / service`` spread over the K
+    slots the round serves. Long-lived requests make the allocator a
     low-contention lock — the selector then relaxes toward cheaper spin
-    waits; pathological churn (service of a step or two) saturates it.
+    waits; pathological churn (service of a step or two at K=1)
+    saturates it. The pre-batching estimate was ``2K / service``
+    critical sections per step — per-request admission and retirement —
+    which this strictly lower-bounds.
     """
     if capacity < 1:
         return 0.0
-    return float(min(1.0, 2.0 / max(float(service_steps), 1.0)))
+    return float(min(1.0, round_events
+                 / max(float(service_steps), 1.0)
+                 / float(capacity)))
 
 
 class AdmissionController:

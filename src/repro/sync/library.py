@@ -125,14 +125,30 @@ class SyncLibrary:
 
     # ------------------------------------------------------------- live form
     def mutex(self, kind: Optional[str] = None, *,
-              expected_contention: float = 1.0):
+              expected_contention: float = 1.0,
+              strategy: Optional[WaitStrategy] = None):
         """Live mutex. ``expected_contention`` (fraction of participants
         expected to contend at once) feeds the paper's Section-6 wait-
-        strategy relaxation — hot allocators pass their own estimate."""
+        strategy relaxation — hot allocators pass their own estimate.
+
+        ``kind="adaptive"`` returns a contention-adaptive FIFO ticket
+        mutex (``hostsync.AdaptiveMutex``): it starts on the strategy
+        selected for ``expected_contention`` and re-selects
+        spin / spin-backoff / sleep from its own measured contention
+        window whenever the owner calls ``retune()`` — between scheduler
+        rounds, never mid-critical-section. ``strategy`` pins the wait
+        strategy for this one mutex (the sweep benchmarks use it to pin
+        each arm); the library-level ``self.strategy`` pin still wins.
+        """
         c = self.choice(PrimitiveKind.MUTEX,
                         expected_contention=expected_contention)
         kind = kind or self.mutex_kind or c.algorithm
-        return self._backend().mutex(kind, self.strategy or c.strategy)
+        strat = self.strategy or strategy or c.strategy
+        if kind == "adaptive":
+            from repro.core.hostsync import AdaptiveMutex
+            inner = self._backend().mutex("ticket", strat)
+            return AdaptiveMutex(inner, self.machine)
+        return self._backend().mutex(kind, strat)
 
     def semaphore(self, initial: int, kind: Optional[str] = None):
         c = self.choice(PrimitiveKind.SEMAPHORE, semaphore_initial=initial)

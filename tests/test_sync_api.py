@@ -361,3 +361,103 @@ def test_plan_admission_backend_flows_through():
     assert p_def.backend == "kernel" and p_ref.backend == "ref"
     np.testing.assert_allclose(p_def.grant, p_ref.grant, rtol=1e-6)
     assert p_def.waited[:2].sum() == 0 and p_def.waited[2:].sum() == 4
+
+
+# ------------------------------------- contention-adaptive wait strategy
+def test_select_wait_strategy_follows_paper_guidelines():
+    from repro.core.abstraction import (WaitStrategy, classify,
+                                        select_wait_strategy)
+    from repro.sync.library import HOST_NOMINAL
+    assert classify(HOST_NOMINAL) == "balanced"
+    # balanced machine: spin when uncontended, backoff at moderate
+    # contention, bounded-atomics sleep when saturated
+    assert select_wait_strategy(HOST_NOMINAL, 0.0) is WaitStrategy.SPIN
+    assert (select_wait_strategy(HOST_NOMINAL, 0.3)
+            is WaitStrategy.SPIN_BACKOFF)
+    assert select_wait_strategy(HOST_NOMINAL, 0.9) is WaitStrategy.SLEEP
+    # tesla-class: contentious atomics are 10-90x volatile — give up on
+    # spinning almost immediately
+    assert select_wait_strategy(TESLA, 0.01) is WaitStrategy.SPIN
+    assert select_wait_strategy(TESLA, 0.05) is WaitStrategy.SLEEP
+    # fermi-class line hostage punishes tight polling: backoff even at
+    # saturation (paper: spin+backoff is the best Fermi mutex)
+    assert (select_wait_strategy(FERMI, 0.9)
+            is WaitStrategy.SPIN_BACKOFF)
+    # no atomics to retry: polling volatile flags is all there is
+    assert select_wait_strategy(TPU_V5E, 0.0) is WaitStrategy.SLEEP
+    # out-of-range inputs clamp instead of raising
+    assert select_wait_strategy(HOST_NOMINAL, -1.0) is WaitStrategy.SPIN
+    assert select_wait_strategy(HOST_NOMINAL, 7.0) is WaitStrategy.SLEEP
+
+
+def test_adaptive_mutex_retunes_between_rounds(lib):
+    from repro.core.abstraction import WaitStrategy
+    from repro.core.hostsync import AdaptiveMutex, TicketMutex
+    m = lib.mutex(kind="adaptive", expected_contention=0.9)
+    assert isinstance(m, AdaptiveMutex)
+    assert isinstance(m.inner, TicketMutex)   # Algorithm 3 never changes
+    # measured signal drives the strategy; identical re-selections are
+    # not counted as retunes
+    assert m.retune(0.0) is WaitStrategy.SPIN
+    assert m.retune(0.0) is WaitStrategy.SPIN
+    assert m.retunes == 1
+    assert m.retune(0.95) is WaitStrategy.SLEEP
+    assert m.retunes == 2
+    # the mutex still is a mutex, and its counters still count
+    with m:
+        pass
+    assert m.acquires == 1 and m.contended_acquires == 0
+    st = m.lock_stats()
+    assert st["retunes"] == 2 and st["strategy"] == "sleep"
+    # default retune() reads the inner lock's measured sliding window
+    assert m.retune() is WaitStrategy.SPIN    # uncontended so far
+
+
+def test_mutex_lock_stats_count_contention():
+    import threading
+    import time
+
+    from repro.core.hostsync import TicketMutex
+    m = TicketMutex()
+    m.lock()
+    t = threading.Thread(target=lambda: (m.lock(), m.unlock()))
+    t.start()
+    deadline = time.monotonic() + 5.0
+    while m._ticket.load() < 2:               # waiter holds its ticket
+        assert time.monotonic() < deadline
+        time.sleep(1e-4)
+    m.unlock()
+    t.join()
+    assert m.acquires == 2
+    assert m.contended_acquires == 1          # the waiter's acquire
+    assert m.held_s > 0.0
+    assert 0.0 < m.recent_contention() <= 0.5
+    m.reset_stats()
+    assert m.acquires == 0 and m.recent_contention() == 0.0
+
+
+# --------------------------------------------- batched-grant window op
+def test_ticket_lock_batch_window_accounting():
+    """The batched-grant plan: FIFO grant order identical to per-page
+    granting, page offsets are the exclusive running total, and the
+    atomics ledger says one FA per requester vs one per page."""
+    from repro.kernels.ticket_lock.ops import (ticket_lock_batch_window,
+                                               ticket_lock_window)
+    arrival = np.asarray([0, 1, 2, 3, 4], np.int32)
+    counts = np.asarray([3, 1, 0, 4, 2], np.int64)
+    g, starts, total, (batched, per_page) = ticket_lock_batch_window(
+        arrival, counts)
+    gw, _, _ = ticket_lock_window(arrival)
+    np.testing.assert_array_equal(g, np.asarray(gw))  # same FIFO grants
+    np.testing.assert_array_equal(starts, [0, 3, 4, 4, 8])
+    assert total == 10 and (batched, per_page) == (5, 10)
+    # kernel and pure-jnp ref agree
+    g2, s2, t2, a2 = ticket_lock_batch_window(arrival, counts,
+                                              use_kernel=False)
+    np.testing.assert_array_equal(g, g2)
+    np.testing.assert_array_equal(starts, s2)
+    assert (t2, a2) == (total, (batched, per_page))
+    with pytest.raises(ValueError):
+        ticket_lock_batch_window(arrival, counts[:3])
+    with pytest.raises(ValueError):
+        ticket_lock_batch_window(arrival, -counts)
