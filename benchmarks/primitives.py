@@ -221,7 +221,7 @@ def alloc_sweep(
     (BENCH_alloc.json): per-strategy per-thread-count ops/s, contended
     fraction, held time, and the strategy the adaptive arm settled on.
     """
-    from repro.serve.kv_pages import PagePool
+    from repro.serve.kv_pages import PagePool, PagePoolExhausted
     from repro.sync import SyncLibrary
 
     lib = SyncLibrary.host_default()
@@ -257,7 +257,7 @@ def alloc_sweep(
                     try:
                         ids = pool.alloc_batch([n], [tid])[0]
                         held.append(ids)
-                    except Exception:
+                    except PagePoolExhausted:
                         pass               # exhausted: free next iteration
                 if held:
                     pool.free_batch(held)

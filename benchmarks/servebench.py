@@ -19,6 +19,16 @@ plus the Algorithm-5 kernel-planned wait percentiles for the same trace,
 so the predicted and measured timelines can be compared. ``--kv-layout``
 selects which engine rows to measure (CI runs both).
 
+A dedicated **shared-prefix trace** (``paged_prefix`` rows) measures
+copy-on-write prefix sharing (DESIGN.md §11): groups of requests repeat
+a live prompt with arrivals staggered one round apart, and the paged
+engine runs with ``--prefix-sharing on`` and ``off`` on the identical
+trace. Token streams must match bit-for-bit; the ``on`` row must
+allocate strictly fewer physical pages (``pages_per_token`` — prefix
+pages become increfs) at no increase in ``lock_acquires_per_token``
+(refcount traffic rides the existing batched critical sections). CI
+asserts both deltas.
+
   PYTHONPATH=src python benchmarks/servebench.py --smoke
 
 ``--smoke`` runs a reduced sweep and writes ``BENCH_serve.json`` so CI
@@ -45,10 +55,33 @@ def poisson_arrival_steps(n: int, capacity: int, new_tokens: int,
     return np.floor(np.cumsum(gaps)).astype(np.int64)
 
 
+def shared_prefix_prompts(n: int, prompt_len: int, n_groups: int,
+                          vocab: int, rng) -> np.ndarray:
+    """The prefix-sharing arrival trace's prompts: ``n_groups`` distinct
+    random prompts, each repeated round-robin — every follower's prompt
+    is a full-length (page-aligned by construction when prompt_len is a
+    page multiple) repeat of a live leader's, the workload shape of
+    shared system preambles / few-shot headers."""
+    base = rng.integers(0, vocab, (n_groups, prompt_len)).astype(np.int32)
+    return base[np.arange(n) % n_groups]
+
+
+def staggered_arrivals(n: int, n_groups: int, decode_chunk: int
+                       ) -> np.ndarray:
+    """Round-robin waves: one request per group per scheduler round
+    (``decode_chunk`` steps). Same-round admissions cannot adopt from
+    each other (the donor's pages exist only after its insert), so the
+    wave spacing guarantees every follower's admission finds the
+    previous member of its group still decoding — a live donor — as
+    long as ``n_groups`` leaves slot headroom (the trace runner keeps
+    ``n_groups <= capacity / 2``)."""
+    return (decode_chunk * (np.arange(n) // n_groups)).astype(np.int64)
+
+
 def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
                       new_tokens, decode_chunk, seed, kv_layout="slots",
                       page_size=16, page_growth="lazy",
-                      allocator_wait=None):
+                      allocator_wait=None, prefix_sharing="auto"):
     from repro.serve.engine import SlotServeEngine
     n, prompt_len = prompts.shape
     max_len = prompt_len + new_tokens + 1
@@ -56,7 +89,8 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
                              max_len=max_len, decode_chunk=decode_chunk,
                              seed=seed, kv_layout=kv_layout,
                              page_size=page_size, page_growth=page_growth,
-                             allocator_wait=allocator_wait)
+                             allocator_wait=allocator_wait,
+                             prefix_sharing=prefix_sharing)
     # warm the prefill/decode traces outside the timed region, then
     # reset every counter the report reads (step clock included, so the
     # arrival schedule starts at 0)
@@ -67,6 +101,8 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
     engine.decode_dispatches = 0
     engine.step_clock = 0
     engine.pauses = engine.preemptions = 0
+    engine.prefix_hits = engine.shared_pages_adopted = 0
+    engine.cow_splits = 0
     engine.admission.admitted = engine.admission.completed = 0
     if kv_layout == "paged":
         engine.pool.pages.reset_stats()
@@ -113,6 +149,13 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
             # benchmarks against: one lock acquisition per page moved
             "per_page_lock_acquires_per_token": float(
                 st["per_page_lock_acquires_per_token"]),
+            # prefix sharing's ledger (DESIGN.md §11)
+            "prefix_sharing": bool(engine.prefix_sharing),
+            "pages_alloced": int(st["pages_alloced"]),
+            "pages_per_token": float(st["pages_per_token"]),
+            "prefix_hits": int(st["prefix_hits"]),
+            "shared_pages_adopted": int(st["shared_pages_adopted"]),
+            "cow_splits": int(st["cow_splits"]),
         })
     return row, streams
 
@@ -165,6 +208,15 @@ def main(argv=None):
                              "sleeping", "adaptive"),
                     help="pin the page allocator's wait strategy "
                          "(default: select_impl's choice)")
+    ap.add_argument("--prefix-sharing", default="both",
+                    choices=("on", "off", "both"),
+                    help="which sharing modes the dedicated "
+                         "shared-prefix trace measures (paged layout "
+                         "only; 'both' adds the on-vs-off deltas the CI "
+                         "gate asserts)")
+    ap.add_argument("--prefix-groups", type=int, default=4,
+                    help="distinct prompts in the shared-prefix trace "
+                         "(every other request repeats one of them)")
     ap.add_argument("--load", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -269,6 +321,72 @@ def main(argv=None):
                   f"plan_p99={got['plan_p99_wait_steps']:.1f},"
                   f"speedup={got['speedup_vs_legacy']:.2f}x,"
                   f"fifo_ok={got['fifo_ok']}{extra}")
+
+    # ---- dedicated shared-prefix trace (prefix sharing on vs off) ----
+    # Every follower repeats a live leader's prompt, arrivals staggered
+    # one round apart so the prefix index is warm at each admission.
+    # Sharing must not change a single token (greedy bit-identity);
+    # what it changes is the page ledger: prefix pages become increfs.
+    if "paged" in layouts and args.kv_layout != "slots":
+        k = max(args.capacities)
+        # half the slots serve leaders, half followers: every wave's
+        # admission finds the previous member of its group still live
+        n_groups = max(1, min(args.prefix_groups, k // 2, args.requests))
+        # an unaligned prompt length puts the prompt's tail in a partial
+        # page, so every adoption ends in a real CoW split at the
+        # follower's first generated token — the trace exercises the
+        # whole §11 protocol, not just boundary adoption
+        sp_prompt_len = args.prompt_len + (args.prompt_len % args.page_size
+                                           == 0)
+        # long enough generation that page demand arises *mid-flight*
+        # (past the prefill bucket's grant): the off-run then pays grow
+        # acquires for pages the on-run never allocates, which is where
+        # sharing's lock story shows up — splits fold into grow rounds
+        sp_new_tokens = max(3 * args.new_tokens, 2 * args.decode_chunk)
+        sp_prompts = shared_prefix_prompts(
+            args.requests, sp_prompt_len, n_groups, cfg.vocab_size,
+            np.random.default_rng(args.seed + 1))
+        sp_arrivals = staggered_arrivals(args.requests, n_groups,
+                                         args.decode_chunk)
+        modes = (("on", "off") if args.prefix_sharing == "both"
+                 else (args.prefix_sharing,))
+        sp_rows, sp_streams = {}, {}
+        for mode in modes:
+            got, streams = bench_slot_engine(
+                model, params, sp_prompts, sp_arrivals, capacity=k,
+                new_tokens=sp_new_tokens, decode_chunk=args.decode_chunk,
+                seed=args.seed, kv_layout="paged",
+                page_size=args.page_size, page_growth=args.page_growth,
+                allocator_wait=args.allocator_wait, prefix_sharing=mode)
+            sp_rows[mode] = got
+            sp_streams[mode] = streams
+        if len(modes) == 2:
+            on, off = sp_rows["on"], sp_rows["off"]
+            on["tokens_match_off"] = bool(
+                sp_streams["on"] == sp_streams["off"])
+            on["pages_drop_vs_off"] = (
+                off["pages_per_token"] / on["pages_per_token"]
+                if on["pages_per_token"] else float("inf"))
+            on["lock_ratio_vs_off"] = (
+                on["lock_acquires_per_token"]
+                / off["lock_acquires_per_token"]
+                if off["lock_acquires_per_token"] else float("inf"))
+        rows["paged_prefix"] = {"capacity": k, "groups": n_groups,
+                                **sp_rows}
+        for mode in modes:
+            r = sp_rows[mode]
+            extra = ""
+            if mode == "on" and "pages_drop_vs_off" in r:
+                extra = (f",pages_drop_vs_off={r['pages_drop_vs_off']:.2f}x,"
+                         f"lock_ratio_vs_off={r['lock_ratio_vs_off']:.2f},"
+                         f"tokens_match={r['tokens_match_off']}")
+            print(f"paged_prefix_{mode}_K{k},"
+                  f"tok_per_s={r['tok_per_s']:.1f},"
+                  f"pages_per_token={r['pages_per_token']:.3f},"
+                  f"lock_per_tok={r['lock_acquires_per_token']:.4f},"
+                  f"prefix_hits={r['prefix_hits']},"
+                  f"shared_pages={r['shared_pages_adopted']},"
+                  f"cow_splits={r['cow_splits']}{extra}")
 
     if args.out:
         with open(args.out, "w") as f:

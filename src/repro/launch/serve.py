@@ -13,7 +13,9 @@ decode dispatch per round.
 workload for comparison. ``--kv-layout paged`` swaps the contiguous slot
 arena for the block-table page arena (serve/kv_pages.py) whose
 mutex-gated allocator lets per-slot contexts exceed ``max_len`` at equal
-arena bytes; ``--page-size`` sets its granularity.
+arena bytes; ``--page-size`` sets its granularity and
+``--prefix-sharing`` adds copy-on-write prompt-prefix sharing on top
+(repeated prompts adopt live pages instead of allocating).
 The sync substrate is a CLI knob:
 ``--sync-backend`` picks the admission planner's backend (interpret
 kernel / TPU hardware / pure-jnp ref) and ``--admission-sem`` the live
@@ -69,6 +71,7 @@ def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
         decode_chunk=args.decode_chunk, seed=args.seed,
         kv_layout=args.kv_layout, page_size=args.page_size,
         page_growth=args.page_growth, allocator_wait=args.allocator_wait,
+        prefix_sharing=args.prefix_sharing,
         sync=sync if sync is not None else make_sync_library(args))
     arrivals = (np.zeros(n) if arrivals_steps is None
                 else np.asarray(arrivals_steps))
@@ -128,6 +131,13 @@ def main(argv=None):
                     help="page-allocator mutex wait strategy; adaptive "
                          "re-selects between rounds from measured "
                          "contention (default: select_impl's choice)")
+    ap.add_argument("--prefix-sharing", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="copy-on-write prompt-prefix sharing on the "
+                         "paged arena: requests whose prompt repeats a "
+                         "live prefix adopt its pages read-only and "
+                         "split on first divergent write (auto = on for "
+                         "paged greedy attention serving; DESIGN.md §11)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="also run the old per-request loop")
@@ -191,6 +201,12 @@ def main(argv=None):
               f"{int(st['page_pauses'])} pauses, "
               f"{int(st['page_preemptions'])} preemptions, "
               f"{int(st['lock_retunes'])} retunes")
+        share = "on" if engine.prefix_sharing else "off"
+        print(f"[serve] prefix sharing {share}: "
+              f"{int(st['prefix_hits'])} hits, "
+              f"{int(st['shared_pages_adopted'])} pages adopted, "
+              f"{int(st['cow_splits'])} CoW splits, "
+              f"{st['pages_per_token']:.3f} pages alloc'd per token")
     fifo_ok = engine.grant_log == sorted(engine.grant_log)
     print(f"[serve] FIFO grant order: {'OK' if fifo_ok else 'VIOLATED'} "
           f"({len(engine.grant_log)} grants, semaphore in-flight "

@@ -339,13 +339,36 @@ def gather_pages(arena: jax.Array, pages: jax.Array) -> jax.Array:
     return g.reshape((b, np_ * ps) + g.shape[3:])
 
 
+def copy_pages(arena: jax.Array, src: jax.Array, dst: jax.Array,
+               axis: int = 0) -> jax.Array:
+    """Copy whole pages ``src[i] -> dst[i]`` within one arena — the
+    device half of a copy-on-write split (kv_pages.PagedSlotPool's
+    split pass). arena [..., num_pages, ps, ...] with the page axis at
+    ``axis`` (periods-stacked families carry leading layer axes);
+    src/dst [n] int32.
+
+    The copy is page-granular and runs to completion before the next
+    decode dispatch reads the arena, so — together with the split
+    invariant ("a shared page is never written; a written page has
+    refcount 1", DESIGN.md §11) — readers of the *original* page never
+    observe a partially-split page: the writer's block table is simply
+    repointed at the finished copy."""
+    idx = (slice(None),) * axis + (dst,)
+    return arena.at[idx].set(jnp.take(arena, src, axis=axis))
+
+
 def scatter_page_token(arena: jax.Array, pages: jax.Array, pos: jax.Array,
                        val: jax.Array) -> jax.Array:
     """Write ``val[b]`` at flat position ``pos[b]`` of row b's paged
     cache. arena [num_pages, ps, ...]; pages [B, P]; pos [B]; val [B, ...].
     Writes addressed past the block table or into sentinel (unallocated)
     entries drop — the paged analogue of the contiguous layout's
-    out-of-range ``mode="drop"`` update."""
+    out-of-range ``mode="drop"`` update. Under copy-on-write prefix
+    sharing the engine guarantees the table this scatter reads is the
+    *post-split* one: a row whose write would land in a shared
+    (refcount > 1) page is either split before the dispatch or has its
+    table row sentinel-masked for the round, so a scatter can never
+    write a page another slot still reads."""
     num_pages, ps = arena.shape[0], arena.shape[1]
     p_cap = pages.shape[1]
     page_idx = pos // ps

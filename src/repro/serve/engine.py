@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.kv_pages import PagedSlotPool
+from repro.serve.kv_pages import PagedSlotPool, PrefixIndex
 from repro.serve.kv_slots import SlotPool
 from repro.serve.scheduler import AdmissionController, allocator_contention
 from repro.sync import SyncLibrary
@@ -167,6 +167,24 @@ class SlotServeEngine:
     ``allocator_wait`` pins the allocator's wait strategy ("spin",
     "spin_backoff", "sleeping") or selects ``"adaptive"`` — re-resolved
     between rounds from the measured contended-acquire fraction.
+
+    ``prefix_sharing`` ("auto"/"on"/"off", DESIGN.md §11) adds
+    copy-on-write prompt-prefix sharing on the paged layout: admission
+    looks the new prompt up in a :class:`PrefixIndex` (longest live
+    match at page granularity, same prefill bucket), adopts the matched
+    pages read-only (an incref riding the admission batch's one
+    allocator acquire) and scatters only the private remainder — a
+    request repeating a live prompt allocates *zero* prefix pages. The
+    per-round page-prep pass enforces the split invariant — *a shared
+    page is never written; a written page has refcount 1* — by giving
+    any slot whose next write targets a shared page a private copy
+    (alloc + arena copy + decref, folded into the top-up pass's one
+    acquire); a slot whose split is starved pauses with its block-table
+    row sentinel-masked for the dispatch, so no dispatch ever writes a
+    page another slot still reads. "auto" enables sharing exactly when
+    its bit-identity contract is checkable: paged layout, greedy
+    decoding, attention prefill (padded buckets). Token streams are
+    bit-identical with sharing on or off.
     """
 
     def __init__(self, model, params, *, capacity: int, max_len: int,
@@ -183,6 +201,7 @@ class SlotServeEngine:
                  admit_headroom: float = 0.1,
                  page_lookahead_chunks: int = 2,
                  allocator_wait: Optional[str] = None,
+                 prefix_sharing: str = "auto",
                  sync: Optional[SyncLibrary] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.frontend is not None:
@@ -226,6 +245,24 @@ class SlotServeEngine:
                                      or temperature > 0.0):
             page_growth = "eager"
         self.page_growth = page_growth if kv_layout == "paged" else "eager"
+        if prefix_sharing not in ("auto", "on", "off"):
+            raise ValueError(
+                f"unknown prefix_sharing {prefix_sharing!r}; "
+                f"expected auto, on, or off")
+        if prefix_sharing == "on" and kv_layout != "paged":
+            raise ValueError("prefix_sharing requires kv_layout='paged' "
+                             "(the contiguous arena has no pages to share)")
+        # "auto" turns sharing on exactly where its bit-identity contract
+        # holds by construction: paged pages to adopt, greedy decoding
+        # (token streams must be comparable on/off), attention prefill
+        # (bucketed shapes make donor/adopter K/V shape-identical —
+        # mamba prefill runs at exact prompt length and its recurrent
+        # state is slot-dense, so there is nothing page-shaped to adopt
+        # a prefix from).
+        self.prefix_sharing = (
+            prefix_sharing == "on"
+            or (prefix_sharing == "auto" and kv_layout == "paged"
+                and temperature <= 0.0 and self._can_pad))
         self.admit_headroom = float(admit_headroom)
         # top-ups cover this many chunks ahead (capped at the request's
         # admission-time bound) so a long decode pays one grow acquire
@@ -246,6 +283,9 @@ class SlotServeEngine:
         self._admission_planner = (
             self.sync.semaphore_planner(capacity, window=self.plan_window)
             if use_admission_kernel else None)
+        self.prefix_index = (PrefixIndex(self.pool.page_size,
+                                         self.pool.pages)
+                             if self.prefix_sharing else None)
         self.queue: List[ServeRequest] = []
         self.active: Dict[int, ServeRequest] = {}      # slot -> request
         self.finished: List[ServeRequest] = []
@@ -254,6 +294,9 @@ class SlotServeEngine:
         self.decode_dispatches = 0
         self.pauses = 0          # slot-rounds a lazy top-up had to wait
         self.preemptions = 0     # lazy-overflow evictions (restart victims)
+        self.prefix_hits = 0     # admissions that adopted a live prefix
+        self.shared_pages_adopted = 0   # pages incref'd instead of alloc'd
+        self.cow_splits = 0      # private copies made on divergent writes
 
         self._next_rid = 0
         self._last_tok = np.zeros(capacity, np.int32)
@@ -389,9 +432,20 @@ class SlotServeEngine:
         the initial grant is just the prefill bucket — the worst case is
         only page-*bounded*, not reserved — and the gate is the headroom
         watermark instead of ``can_reserve(worst_case)``.
+
+        With prefix sharing on, staging also looks each prompt up in
+        the prefix index: adopted pages are incref'd *inside the same
+        reserve_batch critical section* and only the private remainder
+        is granted, so sharing changes what the one acquire does, not
+        how many there are. Admission order is untouched: the lookup
+        happens only for the FIFO head the planner already granted — a
+        prefix hit never lets a younger request jump a page-starved
+        older one. Requests admitted in the same batch cannot adopt
+        from each other (the donor's pages exist only after its
+        insert); the index warms for the next round.
         """
         n_admit = self._planned_admit_count()
-        staged = []                # (req, slot, lp, bucket, reserve, grant)
+        staged = []    # (req, slot, lp, bucket, reserve, grant, sh_ids, sh_len)
         staged_pages = 0
         lazy = self.kv_layout == "paged" and self.page_growth == "lazy"
         while len(staged) < n_admit and self.queue and self.pool.n_free:
@@ -412,14 +466,19 @@ class SlotServeEngine:
                          min(bucket + self.decode_chunk
                              * self.page_lookahead_chunks, need))
                      if lazy else reserve)
+            sh_len, sh_ids = ((self.prefix_index.lookup(req.prompt, bucket)
+                               if self.prefix_sharing else (0, None)))
+            n_shared = 0 if sh_ids is None else int(sh_ids.size)
             if self.kv_layout == "paged":
                 fits = (self.pool.can_admit_lazy(
                             grant, reserve,
                             headroom_pages=self._headroom_pages(),
-                            pending_pages=staged_pages)
+                            pending_pages=staged_pages,
+                            shared_pages=n_shared)
                         if lazy else
                         self.pool.can_reserve(
-                            reserve, pending_pages=staged_pages))
+                            reserve, pending_pages=staged_pages,
+                            shared_pages=n_shared))
                 if not fits:
                     break
             self.queue.pop(0)
@@ -430,22 +489,27 @@ class SlotServeEngine:
                 self.queue.insert(0, req)
                 break
             slot = self.pool.acquire(req.rid)
-            staged.append((req, slot, lp, bucket, reserve, grant))
+            staged.append((req, slot, lp, bucket, reserve, grant,
+                           sh_ids, sh_len))
             if self.kv_layout == "paged":
-                staged_pages += self.pool.pages.pages_for(grant)
+                staged_pages += max(
+                    self.pool.pages.pages_for(grant) - n_shared, 0)
         if not staged:
             return 0
 
         # one allocator critical section for the whole admission batch
+        # (private grants AND shared-prefix increfs together)
         if self.kv_layout == "paged":
             grants = self.pool.reserve_batch(
-                [(slot, grant) for (_, slot, _, _, _, grant) in staged])
+                [(slot, grant)
+                 for (_, slot, _, _, _, grant, _, _) in staged],
+                shared=[sh_ids for (*_, sh_ids, _) in staged])
         else:
             grants = [None] * len(staged)
 
         instant = []               # eos/0-budget on the prefill token
-        for (req, slot, lp, bucket, reserve, grant), ids in zip(staged,
-                                                                grants):
+        for (req, slot, lp, bucket, reserve, grant,
+             sh_ids, sh_len), ids in zip(staged, grants):
             padded = np.zeros(bucket, np.int32)
             padded[:lp] = req.prompt
             length = (jnp.asarray([lp], jnp.int32)
@@ -456,7 +520,16 @@ class SlotServeEngine:
             self._key, sub = jax.random.split(self._key)
             tok0 = int(self._sample(logits, sub)[0])
             if self.kv_layout == "paged":
-                self.pool.insert(slot, cache, lp, reserve=grant, ids=ids)
+                self.pool.insert(slot, cache, lp, reserve=grant, ids=ids,
+                                 shared_ids=sh_ids, shared_len=sh_len)
+                if self.prefix_sharing:
+                    if sh_ids is not None and sh_ids.size:
+                        self.prefix_hits += 1
+                        self.shared_pages_adopted += int(sh_ids.size)
+                    self.prefix_index.register(
+                        req.prompt, bucket,
+                        self.pool.page_ids(
+                            slot, self.pool.pages.pages_for(lp)))
             else:
                 self.pool.insert(slot, cache, lp, reserve=reserve)
             self._last_tok[slot] = tok0
@@ -521,21 +594,60 @@ class SlotServeEngine:
         self.preemptions += 1
         self.queue.insert(0, req)              # FIFO: it predates the queue
 
-    def _grow_for_chunk(self, steps: int) -> set:
-        """Lazy growth's per-round top-up pass: ONE allocator critical
-        section tops every active slot up to the pages this chunk's
-        writes and reads need (capped at the admission-time worst case).
+    def _split_plan(self, order: List[int], lens: np.ndarray,
+                    steps: int) -> List[Tuple[int, int]]:
+        """CoW split plan for this round: every ``(slot, table_idx)``
+        whose coming write (flat positions ``[len, len+steps)``)
+        targets a shared (refcount > 1) page — except one *keeper* per
+        page: when every holder of a
+        page is about to write it, the holder with the longest context
+        keeps it in place (its writes start past every other holder's
+        readable prefix, so nothing anyone still reads is touched) and
+        only the rest pay for copies. The keeper's write is sound
+        because the others' decrefs land in the same critical section
+        as the copies' grants, before the dispatch."""
+        targets: Dict[int, List[Tuple[int, int]]] = {}   # page -> [(slot, j)]
+        for s in order:
+            hits = self.pool.shared_write_targets(
+                s, int(lens[s]), int(lens[s]) + steps)
+            for j, page in hits:
+                targets.setdefault(page, []).append((s, j))
+        plan: List[Tuple[int, int]] = []
+        for page, writers in targets.items():
+            rc = int(self.pool.pages.refcounts([page])[0])
+            if rc == len(writers):
+                # all holders are writers: the longest context keeps the
+                # page (max len; ties to the oldest grant) — everyone
+                # else splits, so post-split refcount is exactly 1
+                keeper = max(
+                    writers,
+                    key=lambda sj: (int(lens[sj[0]]),
+                                    -self.active[sj[0]].rid))
+                writers = [w for w in writers if w != keeper]
+            plan.extend(writers)
+        return plan
 
-        Grants go oldest-grant-first; when the pool cannot cover a
-        slot's top-up it *pauses* for the round (frozen row: emits
-        nothing, its length rolls back after the dispatch). If nobody
-        can decode — the overflow case over-commit admission makes
-        possible — the youngest grant is evicted back to the queue
-        (eviction-safe: restart, not corruption) until someone can.
-        Returns the set of paused slots; at least one active slot is
-        always decodable on return.
+    def _grow_for_chunk(self, steps: int) -> set:
+        """The per-round page-prep pass: ONE allocator critical section
+        covers both the lazy top-ups (every active slot up to the pages
+        this chunk's writes and reads need, capped at the
+        admission-time worst case) and the CoW splits (a private copy
+        for every shared page some slot is about to write —
+        ``PagedSlotPool.prepare_batch``).
+
+        Grants go oldest-grant-first, splits after; when the pool
+        cannot cover a slot's top-up *or* its split, the slot *pauses*
+        for the round (frozen row: emits nothing, its length rolls
+        back after the dispatch, and its block-table row is
+        sentinel-masked so the dispatch cannot write the still-shared
+        page). If nobody can decode — the overflow case over-commit
+        admission makes possible — the youngest grant is evicted back
+        to the queue (eviction-safe: restart, not corruption) until
+        someone can. Returns the set of paused slots; at least one
+        active slot is always decodable on return.
         """
-        if not self.active or self.page_growth != "lazy":
+        lazy = self.page_growth == "lazy"
+        if not self.active or (not lazy and not self.prefix_sharing):
             return set()
         ps = self.pool.page_size
         lens = np.asarray(self.pool.lens)
@@ -546,21 +658,27 @@ class SlotServeEngine:
             # speculative grant never starves a must-have one
             tight = self.pool.pages.n_free <= self._headroom_pages()
             horizon = steps * (1 if tight else self.page_lookahead_chunks)
-            items = [(s, int(min(lens[s] + horizon, self._grow_cap[s])))
-                     for s in order]
-            self.pool.grow_batch(items)
-            # a slot pauses only when it cannot cover THIS chunk (a
-            # denied lookahead tail is not a reason to stall the row)
+            items = ([(s, int(min(lens[s] + horizon, self._grow_cap[s])))
+                      for s in order] if lazy else [])
+            splits = (self._split_plan(order, lens, steps)
+                      if self.prefix_sharing else [])
+            _, split_ok = self.pool.prepare_batch(items, splits)
+            self.cow_splits += sum(bool(ok) for ok in split_ok)
+            # a slot pauses when it cannot cover THIS chunk (a denied
+            # lookahead tail is not a reason to stall the row) or when
+            # a split it needs starved — the shared page stays read-only
             paused = {
                 s for s in order
                 if self.pool.held_pages(s) * ps
                 < min(lens[s] + steps, self._grow_cap[s])}
+            paused |= {s for (s, _), ok in zip(splits, split_ok) if not ok}
             if len(paused) < len(order):
                 self.pauses += len(paused)
                 return paused
             # a lone slot can always grow (held + need <= max_pages_per_
-            # slot <= num_pages), so preemption strictly shrinks the
-            # starved set and the loop terminates
+            # slot <= num_pages) and never needs a split (refcount > 1
+            # implies a second live holder), so preemption strictly
+            # shrinks the starved set and the loop terminates
             victim = max(order, key=lambda s: self.active[s].rid)
             self._preempt(victim)
             order.remove(victim)
@@ -570,10 +688,11 @@ class SlotServeEngine:
     def step(self) -> int:
         """One scheduler round: re-tune the allocator's wait strategy
         from measured contention, admit per the kernel plan (one
-        batched page grant), lazily top up active slots (one batched
-        grant), then one fixed-shape decode dispatch of ``decode_chunk``
-        tokens, then retire finished rows (one batched free). Returns
-        the number of still-active requests."""
+        batched page grant + prefix-adoption increfs), lazily top up
+        active slots and apply any CoW splits (one batched
+        grant/decref), then one fixed-shape decode dispatch of
+        ``decode_chunk`` tokens, then retire finished rows (one batched
+        decref/free). Returns the number of still-active requests."""
         if self.kv_layout == "paged":
             # between rounds, never mid-critical-section (the adaptive
             # mutex contract); a no-op for pinned/auto wait modes
@@ -591,9 +710,18 @@ class SlotServeEngine:
             if slot not in paused:
                 frozen[slot] = False
         lens_before = np.asarray(self.pool.lens) if paused else None
+        view = self.pool.cache_view()
+        if paused:
+            # paused rows must not touch the arena this round: masking
+            # their block-table rows to sentinel drops their scatters
+            # (in particular into a still-shared page whose CoW split
+            # starved) and their frozen outputs never read anyway; the
+            # rolled-back length makes the resumed chunk rewrite every
+            # dropped position before its first read
+            view["pages"] = self.pool.masked_table(paused)
         self._key, sub = jax.random.split(self._key)
         cache, tok, toks = self._chunk(
-            self.params, self.pool.cache_view(),
+            self.params, view,
             jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
             steps=steps)
         self.decode_dispatches += 1
@@ -685,5 +813,16 @@ class SlotServeEngine:
                 "per_page_lock_acquires_per_token": (
                     float(pp.pages_alloced + pp.pages_freed)
                     / float(max(toks, 1))),
+                # prefix sharing's currency: physical page allocations
+                # per served token (adoptions are increfs, not allocs)
+                "pages_alloced": float(pp.pages_alloced),
+                "pages_per_token": (float(pp.pages_alloced)
+                                    / float(max(toks, 1))),
+                "page_increfs": float(pp.increfs),
+                "page_decrefs": float(pp.decrefs),
+                "prefix_sharing": float(self.prefix_sharing),
+                "prefix_hits": float(self.prefix_hits),
+                "shared_pages_adopted": float(self.shared_pages_adopted),
+                "cow_splits": float(self.cow_splits),
             })
         return out

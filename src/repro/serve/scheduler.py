@@ -60,6 +60,14 @@ def allocator_contention(capacity: int, service_steps: float,
     saturates it. The pre-batching estimate was ``2K / service``
     critical sections per step — per-request admission and retirement —
     which this strictly lower-bounds.
+
+    Copy-on-write prefix sharing (DESIGN.md §11) does not change the
+    estimate: adoption increfs ride the admission grant's critical
+    section (``alloc_batch(incref_groups=)``), CoW split grants and
+    their source decrefs ride the growth top-up's
+    (``prepare_batch``/``paired_decrefs``), and retirement decrefs
+    *are* the retirement reclaim — the same ≤ ``round_events`` entries
+    per round, with or without sharing.
     """
     if capacity < 1:
         return 0.0

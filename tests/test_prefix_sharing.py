@@ -1,0 +1,498 @@
+"""Copy-on-write prefix sharing: refcount protocol, prefix index, CoW
+splits, and the sharing-on/off stream-identity contract (DESIGN.md §11).
+
+The load-bearing properties:
+
+  * a shared page is freed exactly once — by the last holder — no
+    matter how many slots adopted it or in which order they retire;
+  * a shared page is never written: the first divergent write gets a
+    private copy (CoW split) whose grant and source-decref ride the
+    round's existing batched critical section;
+  * greedy token streams are bit-identical with sharing on or off
+    (cross-layout-fingerprint style, like PR 4's lazy-vs-eager suite);
+  * a prefix hit never jumps the admission FIFO.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional in this image (tests/_hypothesis_compat.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve.engine import SlotServeEngine
+from repro.serve.kv_pages import (PagedSlotPool, PageLeakError, PagePool,
+                                  PrefixIndex)
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_arch("qwen3-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ------------------------------------------------------------- refcounts
+def test_shared_page_freed_exactly_once():
+    """Two holders, any retirement order: the page leaves the free list
+    once and returns once — by the *last* decref."""
+    pool = PagePool(8, 4)
+    ids = pool.alloc(2, tag="donor")
+    pool.incref_batch([ids])                     # adopter joins
+    np.testing.assert_array_equal(pool.refcounts(ids), [2, 2])
+    assert pool.free(ids) == []                  # donor retires: rc 2 -> 1
+    assert pool.in_use == 2                      # still held by the adopter
+    pool.check()
+    freed = pool.free(ids)                       # adopter retires: rc 1 -> 0
+    assert sorted(freed) == sorted(int(i) for i in ids)
+    assert pool.in_use == 0
+    pool.check()
+    # the pages moved out of the free list once and back once
+    assert pool.pages_alloced == pool.pages_freed == 2
+    assert pool.increfs == 2 and pool.decrefs == 4
+
+
+def test_same_page_in_two_groups_of_one_batch():
+    """Two adopters retiring in the same round list the same page in one
+    free batch: two decrefs, one (deferred-to-zero) free."""
+    pool = PagePool(8, 4)
+    ids = pool.alloc(1, tag="a")
+    pool.incref_batch([ids])
+    freed = pool.free_batch([ids, ids])          # both holders at once
+    assert sorted(freed) == [int(ids[0])]
+    assert pool.in_use == 0 and pool.frees == 2
+    pool.check()
+
+
+def test_refcount_violations_raise_atomically():
+    pool = PagePool(8, 4)
+    ids = pool.alloc(2, tag="r")
+    with pytest.raises(PageLeakError, match="twice in one free batch"):
+        pool.free_batch([ids[:1], ids[:1]])      # rc 1, two decrefs
+    assert pool.in_use == 2                      # nothing applied
+    with pytest.raises(PageLeakError, match="incref of page"):
+        pool.incref_batch([[7]])                 # free page
+    with pytest.raises(PageLeakError, match="outside the arena"):
+        pool.incref_batch([[99]])
+    np.testing.assert_array_equal(pool.refcounts(ids), [1, 1])
+    pool.free(ids)
+    with pytest.raises(PageLeakError, match="already free"):
+        pool.free(ids[:1])
+    pool.check()
+
+
+def test_epochs_invalidate_recycled_pages():
+    pool = PagePool(4, 4)
+    ids = pool.alloc(2, tag="a")
+    ep = pool.epochs(ids)
+    assert pool.entry_valid(ids, ep)
+    pool.free(ids)
+    assert not pool.entry_valid(ids, ep)         # freed
+    again = pool.alloc(2, tag="b")               # FIFO hands back 2,3 first
+    assert not pool.entry_valid(ids, ep) or not np.array_equal(ids, again)
+    ids2 = pool.alloc(2, tag="c")                # the recycled original ids
+    np.testing.assert_array_equal(ids2, ids)
+    assert not pool.entry_valid(ids2, ep)        # epoch moved on
+    assert pool.entry_valid(ids2, pool.epochs(ids2))
+
+
+def test_alloc_batch_incref_and_paired_decref_one_acquire():
+    """Adoption increfs and CoW paired decrefs ride the grant's critical
+    section: one acquire covers grants + increfs + conditional decrefs,
+    and a paired decref applies only when its request was granted."""
+    pool = PagePool(8, 4)
+    donor = pool.alloc(3, tag="donor")
+    a0 = pool.lock_stats()["acquires"]
+    got = pool.alloc_batch([2], ["adopter"], incref_groups=[donor[:2]])
+    assert pool.lock_stats()["acquires"] == a0 + 1
+    np.testing.assert_array_equal(pool.refcounts(donor), [2, 2, 1])
+    # CoW: grant a 1-page copy, drop the shared source in the same call
+    a1 = pool.lock_stats()["acquires"]
+    copies = pool.alloc_batch([1, 1], [("cow", 0), ("cow", 1)],
+                              partial=True,
+                              paired_decrefs=[[donor[0]], [donor[1]]])
+    assert pool.lock_stats()["acquires"] == a1 + 1
+    granted = [c for c in copies if c is not None]
+    # pool had 3 free: both copies granted, both sources decref'd
+    assert len(granted) == 2
+    np.testing.assert_array_equal(pool.refcounts(donor), [1, 1, 1])
+    pool.check()
+    # starved paired decref does NOT apply: exhaust the pool first
+    pool.incref_batch([donor[:1]])
+    out = pool.alloc_batch([pool.n_free + 1], [("cow", 2)], partial=True,
+                           paired_decrefs=[[donor[0]]])
+    assert out == [None]
+    assert pool.refcounts(donor[:1])[0] == 2     # untouched
+    pool.check()
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_refcount_churn_no_leaks(seed):
+    """Random alloc/incref/decref churn: refcounts, the bitmap, and the
+    free list stay consistent, and a full drain returns every page."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(32, 4)
+    refs = []                                    # outstanding references
+    for step in range(1500):
+        r = rng.random()
+        if refs and (r < 0.35 or pool.n_free == 0):
+            pool.free(refs.pop(rng.integers(len(refs))))
+        elif refs and r < 0.55:
+            g = refs[rng.integers(len(refs))]
+            pool.incref_batch([g])               # adopt an existing group
+            refs.append(np.array(g))
+        else:
+            n = int(rng.integers(1, 4))
+            if n <= pool.n_free:
+                refs.append(pool.alloc(n, tag=step))
+        if step % 250 == 0:
+            pool.check()
+    for g in refs:
+        pool.free(g)
+    pool.check()
+    assert pool.in_use == 0 and pool.n_free == pool.num_pages
+    assert pool.decrefs == pool.pages_alloced + pool.increfs
+
+
+@settings(max_examples=2, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_threaded_incref_decref_batches(seed):
+    """Threads hammering incref_batch/free_batch on shared groups under
+    the ticket mutex: counts never go negative, pages are freed exactly
+    once, and the drained pool partitions cleanly."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(48, 4)
+    base = pool.alloc_batch([3] * 4, list("abcd"))
+    errs = []
+
+    def worker(tid):
+        r = np.random.default_rng(seed + tid)
+        held = []
+        try:
+            for _ in range(80):
+                if held and r.random() < 0.5:
+                    pool.free_batch([held.pop(r.integers(len(held)))])
+                else:
+                    g = base[int(r.integers(len(base)))]
+                    pool.incref_batch([g])
+                    held.append(np.array(g))
+            if held:
+                pool.free_batch(held)
+        except Exception as e:                   # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(int(rng.integers(2, 5)))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    # the base references are still live, everything threaded drained
+    np.testing.assert_array_equal(
+        pool.refcounts(np.concatenate(base)), [1] * 12)
+    pool.check()
+    pool.free_batch(base)
+    assert pool.in_use == 0 and pool.n_free == pool.num_pages
+    pool.check()
+
+
+# ----------------------------------------------------------- prefix index
+def test_prefix_index_longest_match_and_partial_exact_length():
+    pool = PagePool(16, 4)
+    idx = PrefixIndex(4, pool)
+    prompt = np.arange(10, dtype=np.int32)       # 2 full pages + tail of 2
+    pages = pool.alloc(3, tag="donor")
+    assert idx.register(prompt, bucket=16, page_ids=pages) == 3
+    # identical prompt: partial entry wins (whole prompt, 3 pages)
+    ln, ids = idx.lookup(prompt, bucket=16)
+    assert ln == 10 and ids.size == 3
+    # longer prompt sharing the 8-token prefix: boundary match only —
+    # adopting the partial page would require writing it at insert
+    longer = np.concatenate([prompt[:8], [90, 91, 92, 93]]).astype(np.int32)
+    ln, ids = idx.lookup(longer, bucket=16)
+    assert ln == 8 and ids.size == 2
+    np.testing.assert_array_equal(ids, pages[:2])
+    # diverging first page: no match at all
+    other = np.concatenate([[99], prompt[1:]]).astype(np.int32)
+    assert idx.lookup(other, bucket=16) == (0, None)
+    # same tokens, different prefill bucket: structurally excluded
+    assert idx.lookup(prompt, bucket=32) == (0, None)
+
+
+def test_prefix_index_prunes_stale_entries():
+    pool = PagePool(8, 4)
+    idx = PrefixIndex(4, pool)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = pool.alloc(2, tag="donor")
+    idx.register(prompt, bucket=8, page_ids=pages)
+    assert idx.lookup(prompt, bucket=8)[0] == 8
+    pool.free(pages)                             # donor retires, rc -> 0
+    assert idx.lookup(prompt, bucket=8) == (0, None)
+    assert idx.pruned >= 1
+    # recycled pages under the same ids are a different epoch
+    again = pool.alloc(2, tag="other")
+    idx.register(prompt, bucket=8, page_ids=again)
+    assert idx.lookup(prompt, bucket=8)[0] == 8
+    pool.free(again)
+
+
+# -------------------------------------------------- pool-level CoW split
+def test_prepare_batch_splits_shared_write_target():
+    """A shared page about to be written is copied in the same critical
+    section as the round's top-ups: table repointed, source decref'd,
+    arena contents identical in the copy."""
+
+    class _Tiny:
+        def init_cache(self, b, max_len, for_shapes=False):
+            import jax.numpy as jnp
+            mk = (jax.ShapeDtypeStruct if for_shapes
+                  else lambda s, d: jnp.zeros(s, d))
+            return {"periods": {"layer_0": {
+                        "k": mk((2, b, max_len, 1, 2), jnp.float32),
+                        "v": mk((2, b, max_len, 1, 2), jnp.float32)}},
+                    "leftover": {},
+                    "len": mk((), jnp.int32)}
+
+    import jax.numpy as jnp
+    model = _Tiny()
+    pool = PagedSlotPool(model, capacity=2, max_len=16, page_size=4)
+    cache = jax.tree_util.tree_map(
+        lambda a: jnp.full_like(a, 5.0), model.init_cache(1, 8))
+    s0 = pool.acquire(0)
+    pool.insert(s0, cache, 8, reserve=8)         # donor: pages for 8 tokens
+    donor_pages = pool.page_ids(s0)
+    # adopter shares both pages (prompt == donor prompt, fully covered)
+    s1 = pool.acquire(1)
+    pool.reserve_batch([(s1, 8)], shared=[donor_pages])
+    pool.insert(s1, cache, 8, reserve=8, ids=np.zeros(0, np.int32),
+                shared_ids=donor_pages, shared_len=8)
+    np.testing.assert_array_equal(
+        pool.pages.refcounts(donor_pages), [2, 2])
+    pool.check()
+    # adopter's next write lands at position 8 -> page idx 2 (fresh), so
+    # force the interesting case: a write inside shared page 1
+    hits = pool.shared_write_targets(s1, 6, 8)
+    assert [j for j, _ in hits] == [1]
+    a0 = pool.pages.lock_stats()["acquires"]
+    grow_ok, split_ok = pool.prepare_batch([], hits)
+    assert split_ok == [True]
+    assert pool.pages.lock_stats()["acquires"] == a0 + 1
+    np.testing.assert_array_equal(
+        pool.pages.refcounts(donor_pages), [2, 1])   # source dropped to 1
+    new_page = pool.page_ids(s1)[1]
+    assert new_page != donor_pages[1]
+    # the copy carries the source page's contents
+    arena_k = pool.arena["periods"]["layer_0"]["k"]
+    np.testing.assert_array_equal(
+        np.asarray(arena_k[:, int(new_page)]),
+        np.asarray(arena_k[:, int(donor_pages[1])]))
+    pool.check()
+    pool.evict(s0)
+    pool.evict(s1)
+    assert pool.pages.in_use == 0
+    pool.check()
+
+
+# --------------------------------------------- engine stream equivalence
+def _run_trace(model, params, sharing, trace, *, capacity, max_len,
+               page_size=4, growth="lazy", chunk=2):
+    eng = SlotServeEngine(
+        model, params, capacity=capacity, max_len=max_len,
+        decode_chunk=chunk, kv_layout="paged", page_size=page_size,
+        page_growth=growth, prefix_sharing=sharing,
+        eos_id=trace.get("eos"))
+    pending = list(trace["arrivals"])            # (step, prompt, max_new)
+    while pending or eng.queue or eng.active:
+        while pending and pending[0][0] <= eng.step_clock:
+            _, prompt, max_new = pending.pop(0)
+            eng.submit(prompt, max_new)
+        if eng.step() == 0 and not eng.queue and pending:
+            eng.step_clock += 1                  # idle until next arrival
+    return eng
+
+
+def _fingerprint(eng):
+    return (eng.grant_log, {r.rid: r.out_tokens for r in eng.finished})
+
+
+def test_sharing_on_off_identical_streams_same_prompt(lm_setup):
+    """The acceptance contract on the simplest shared workload: a
+    follower repeating a live leader's prompt adopts its pages, CoW
+    splits at its first generated token, and emits the identical
+    stream."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, cfg.vocab_size, 10)
+    arrivals = [(0, prompt, 6), (2, prompt.copy(), 6),
+                (4, prompt.copy(), 4)]
+    on = _run_trace(model, params, "on", {"arrivals": arrivals},
+                    capacity=3, max_len=24)
+    off = _run_trace(model, params, "off", {"arrivals": arrivals},
+                     capacity=3, max_len=24)
+    assert _fingerprint(on) == _fingerprint(off)
+    assert on.prefix_hits == 2                   # both followers adopted
+    assert on.shared_pages_adopted >= 4
+    assert on.cow_splits >= 1                    # partial page diverged
+    assert (on.pool.pages.pages_alloced
+            < off.pool.pages.pages_alloced)
+    for eng in (on, off):
+        eng.pool.check()
+        assert eng.pool.pages.in_use == 0
+
+
+def test_sharing_boundary_prefix_different_suffixes(lm_setup):
+    """Same-length prompts sharing only a page-aligned prefix: boundary
+    adoption (no partial page), streams identical to sharing-off."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(5)
+    head = rng.integers(1, cfg.vocab_size, 8)    # exactly 2 pages at ps=4
+    mk = lambda: np.concatenate(
+        [head, rng.integers(1, cfg.vocab_size, 4)]).astype(np.int32)
+    arrivals = [(0, mk(), 5), (2, mk(), 5), (4, mk(), 3)]
+    on = _run_trace(model, params, "on", {"arrivals": arrivals},
+                    capacity=3, max_len=24)
+    off = _run_trace(model, params, "off", {"arrivals": arrivals},
+                     capacity=3, max_len=24)
+    assert _fingerprint(on) == _fingerprint(off)
+    assert on.prefix_hits == 2
+    # boundary adoption shares exactly the two full head pages each
+    assert on.shared_pages_adopted == 4
+    on.pool.check()
+    assert on.pool.pages.in_use == 0
+
+
+def test_sharing_mixed_prompt_lengths_same_bucket(lm_setup):
+    """Donor whose prompt fills its bucket exactly (prefill compiles the
+    no-length-mask program) donating a boundary prefix to a shorter
+    prompt (length-masked program): the same-bucket index key still
+    guarantees bit-identical shared K/V — causal masking pins positions
+    < boundary to the shared tokens in both programs."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(21)
+    head = rng.integers(1, cfg.vocab_size, 8)
+    donor = np.concatenate(
+        [head, rng.integers(1, cfg.vocab_size, 8)]).astype(np.int32)
+    shorter = np.concatenate(
+        [head, rng.integers(1, cfg.vocab_size, 4)]).astype(np.int32)
+    arrivals = [(0, donor, 6), (4, shorter, 6)]
+    on = _run_trace(model, params, "on", {"arrivals": arrivals},
+                    capacity=2, max_len=32)
+    off = _run_trace(model, params, "off", {"arrivals": arrivals},
+                     capacity=2, max_len=32)
+    assert _fingerprint(on) == _fingerprint(off)
+    assert on.prefix_hits == 1 and on.shared_pages_adopted == 2
+    on.pool.check()
+
+
+def test_donor_side_split_while_decoding_partial_page(lm_setup):
+    """The donor is still writing inside its partial prompt page when an
+    adopter joins: the keeper rule leaves the page with the longest
+    context (the donor) and splits the adopter — streams still match
+    sharing-off bit for bit."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab_size, 9)  # ps=8: partial page 1
+    arrivals = [(0, prompt, 10), (2, prompt.copy(), 10)]
+    on = _run_trace(model, params, "on", {"arrivals": arrivals},
+                    capacity=2, max_len=32, page_size=8)
+    off = _run_trace(model, params, "off", {"arrivals": arrivals},
+                     capacity=2, max_len=32, page_size=8)
+    assert _fingerprint(on) == _fingerprint(off)
+    assert on.prefix_hits == 1 and on.cow_splits >= 1
+    on.pool.check()
+    assert on.pool.pages.in_use == 0
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_sharing_equivalence_random_divergence_points(lm_setup, seed):
+    """Property: random prompt lengths (random divergence positions
+    relative to page boundaries), random repeat/extend/diverge mix,
+    random growth mode — sharing on and off produce identical
+    fingerprints and drain leak-free."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(seed)
+    base_len = int(rng.integers(4, 12))
+    base = rng.integers(1, cfg.vocab_size, base_len)
+    arrivals = []
+    step = 0
+    for i in range(int(rng.integers(3, 6))):
+        step += int(rng.integers(1, 4))
+        kind = rng.random()
+        if kind < 0.5:
+            p = base.copy()                      # exact repeat
+        elif kind < 0.8 and base_len > 4:
+            # same length, divergent tail (same bucket, partial prefix)
+            cut = int(rng.integers(2, base_len))
+            p = np.concatenate(
+                [base[:cut],
+                 rng.integers(1, cfg.vocab_size, base_len - cut)])
+        else:
+            p = rng.integers(1, cfg.vocab_size, base_len)  # unrelated
+        arrivals.append((step, p.astype(np.int32),
+                         int(rng.integers(2, 6))))
+    growth = "lazy" if rng.random() < 0.7 else "eager"
+    trace = {"arrivals": arrivals, "eos": 0}
+    on = _run_trace(model, params, "on", trace, capacity=2, max_len=24,
+                    growth=growth, chunk=int(rng.integers(1, 3)))
+    off = _run_trace(model, params, "off", trace, capacity=2, max_len=24,
+                     growth=growth, chunk=on.decode_chunk)
+    assert _fingerprint(on) == _fingerprint(off)
+    for eng in (on, off):
+        eng.pool.check()
+        assert eng.pool.pages.in_use == 0
+
+
+def test_prefix_hit_does_not_jump_admission_fifo(lm_setup):
+    """A queued request with a 100% prefix hit (zero pages needed) must
+    still wait behind a page-starved FIFO head: sharing changes page
+    accounting, never admission order."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 8)
+    eng = SlotServeEngine(model, params, capacity=3, max_len=16,
+                          kv_layout="paged", page_size=4, decode_chunk=2,
+                          prefix_sharing="on", num_pages=12, seed=0)
+    donor = eng.submit(prompt, 16)               # long: holds pages a while
+    eng.step()
+    # a page-hungry stranger, then a follower that would cost 0 pages
+    stranger = eng.submit(rng.integers(1, cfg.vocab_size, 8), 16)
+    follower = eng.submit(prompt.copy(), 2)
+    eng.run_until_done(max_rounds=200)
+    assert eng.grant_log == [donor.rid, stranger.rid, follower.rid]
+    assert len(eng.finished) == 3
+    eng.pool.check()
+    assert eng.pool.pages.in_use == 0
+
+
+def test_sharing_matches_contiguous_layout(lm_setup):
+    """Cross-layout fingerprint with sharing on: the paged+shared engine
+    still reproduces the contiguous slot arena's streams exactly."""
+    cfg, model, params = lm_setup
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab_size, 8)
+    arrivals = [(0, prompt, 4), (2, prompt.copy(), 4),
+                (3, rng.integers(1, cfg.vocab_size, 6), 3)]
+    paged = _run_trace(model, params, "on", {"arrivals": arrivals},
+                       capacity=2, max_len=24)
+    slots = SlotServeEngine(model, params, capacity=2, max_len=24,
+                            decode_chunk=2)
+    pending = [(s, p, m) for s, p, m in arrivals]
+    while pending or slots.queue or slots.active:
+        while pending and pending[0][0] <= slots.step_clock:
+            _, p, m = pending.pop(0)
+            slots.submit(p, m)
+        if slots.step() == 0 and not slots.queue and pending:
+            slots.step_clock += 1
+    assert _fingerprint(paged) == _fingerprint(slots)
+    assert paged.prefix_hits >= 1
