@@ -16,6 +16,10 @@ mutex-gated allocator lets per-slot contexts exceed ``max_len`` at equal
 arena bytes; ``--page-size`` sets its granularity and
 ``--prefix-sharing`` adds copy-on-write prompt-prefix sharing on top
 (repeated prompts adopt live pages instead of allocating).
+``--prefill-chunk-tokens`` turns on continuous chunked prefill — prompts
+prefill a fixed chunk per scheduler round *inside* the decode dispatch,
+under a ``--round-token-budget`` that funds decode rows first — so a
+long prompt never stalls in-flight decodes.
 The sync substrate is a CLI knob:
 ``--sync-backend`` picks the admission planner's backend (interpret
 kernel / TPU hardware / pure-jnp ref) and ``--admission-sem`` the live
@@ -72,6 +76,8 @@ def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
         kv_layout=args.kv_layout, page_size=args.page_size,
         page_growth=args.page_growth, allocator_wait=args.allocator_wait,
         prefix_sharing=args.prefix_sharing,
+        prefill_chunk_tokens=args.prefill_chunk_tokens,
+        round_token_budget=args.round_token_budget,
         sync=sync if sync is not None else make_sync_library(args))
     arrivals = (np.zeros(n) if arrivals_steps is None
                 else np.asarray(arrivals_steps))
@@ -138,6 +144,16 @@ def main(argv=None):
                          "live prefix adopt its pages read-only and "
                          "split on first divergent write (auto = on for "
                          "paged greedy attention serving; DESIGN.md §11)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    help="continuous chunked prefill: prefill admitted "
+                         "prompts this many tokens per scheduler round "
+                         "inside the decode dispatch instead of one "
+                         "whole-prompt prefill at admission (greedy "
+                         "attention archs only; DESIGN.md §12)")
+    ap.add_argument("--round-token-budget", type=int, default=None,
+                    help="per-round token budget the scheduler fills "
+                         "with decode rows first, then prefill chunks "
+                         "(default: capacity*decode_chunk + chunk)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="also run the old per-request loop")
@@ -181,6 +197,18 @@ def main(argv=None):
           f"{int(st['decode_dispatches'])} dispatches, "
           f"p50 wait {st['p50_wait_steps']:.0f} steps "
           f"p99 {st['p99_wait_steps']:.0f}")
+    if engine.prefill_chunk:
+        print(f"[serve] chunked prefill: {engine.prefill_chunk} tok/chunk, "
+              f"budget {engine.round_token_budget} tok/round, "
+              f"{int(st['prefill_chunks'])} chunks over "
+              f"{int(st['prefill_tokens'])} prompt tokens, "
+              f"pad fraction {st['pad_fraction']:.3f}, "
+              f"{int(st['decode_rounds_stalled_by_prefill'])} decode "
+              f"rounds stalled by prefill")
+    elif args.prefill_chunk_tokens:
+        print("[serve] chunked prefill requested but disabled "
+              "(needs greedy decoding + attention-only arch); "
+              f"one-shot pad fraction {st['pad_fraction']:.3f}")
     if args.kv_layout == "paged":
         pool = engine.pool
         print(f"[serve] page arena: {pool.pages.num_pages} pages x "

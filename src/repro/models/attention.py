@@ -379,6 +379,26 @@ def scatter_page_token(arena: jax.Array, pages: jax.Array, pos: jax.Array,
     return arena.at[page, pos % ps].set(val.astype(arena.dtype), mode="drop")
 
 
+def scatter_page_tokens(arena: jax.Array, pages: jax.Array, pos: jax.Array,
+                        val: jax.Array) -> jax.Array:
+    """Chunk form of :func:`scatter_page_token`: write ``val[b, c]`` at
+    flat position ``pos[b, c]`` of row b's paged cache. arena
+    [num_pages, ps, ...]; pages [B, P]; pos [B, C]; val [B, C, ...].
+    Lanes whose position lies past the block table (in particular the
+    engine's drop sentinel — a huge *positive* position, never negative,
+    because JAX wraps negative indices) or in a sentinel table entry
+    drop, exactly as the single-token scatter. Within one chunk the
+    engine feeds strictly increasing positions per row, so no two lanes
+    alias one (page, offset) cell."""
+    num_pages, ps = arena.shape[0], arena.shape[1]
+    p_cap = pages.shape[1]
+    page_idx = pos // ps                                         # [B, C]
+    page = jnp.take_along_axis(
+        pages, jnp.clip(page_idx, 0, p_cap - 1), axis=1)         # [B, C]
+    page = jnp.where((page_idx >= 0) & (page_idx < p_cap), page, num_pages)
+    return arena.at[page, pos % ps].set(val.astype(arena.dtype), mode="drop")
+
+
 def decode_attention(
     q: jax.Array,            # [B, 1, Hp, hd]
     k_cache: jax.Array,      # [B, T, Hp, hd] (pre-expanded/padded)
@@ -400,6 +420,40 @@ def decode_attention(
     if window is not None:
         valid &= pos[None, :] >= cl - window
     sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqht,bthd->bqhd", p.astype(v_cache.dtype), v_cache)
+    return out.astype(q.dtype)
+
+
+def chunk_decode_attention(
+    q: jax.Array,            # [B, C, Hp, hd]
+    k_cache: jax.Array,      # [B, T, Hp, hd] (pre-expanded/padded)
+    v_cache: jax.Array,
+    q_positions: jax.Array,  # [B, C] absolute position of each query
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Chunked-prefill attention over the cache: each query at absolute
+    position p attends cache positions <= p (its own K/V was scattered
+    into the cache *before* this read — scatter-then-attend), so the
+    result at a position is independent of how the prompt was chunked.
+    ``decode_attention`` is the C == 1 case with q_positions == cache_len
+    - 1; there is no separate length mask because positions > p are
+    either unwritten (masked here) or another row's concern (gathered
+    views are per-row). Pad lanes of a partial last chunk carry garbage
+    positions; their outputs are discarded and their writes dropped by
+    the engine, so they never influence a real lane."""
+    b, c, h, hd = q.shape
+    t = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    sc = jnp.einsum("bqhd,bthd->bqht", q * scale, k_cache).astype(jnp.float32)
+    pos = jnp.arange(t)
+    qp = jnp.asarray(q_positions)
+    valid = pos[None, None, :] <= qp[:, :, None]                 # [B, C, T]
+    if window is not None:
+        valid &= pos[None, None, :] > qp[:, :, None] - window
+    sc = jnp.where(valid[:, :, None, :], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bqht,bthd->bqhd", p.astype(v_cache.dtype), v_cache)
     return out.astype(q.dtype)
@@ -444,6 +498,26 @@ def paged_decode_attention(p, cfg, q, k_arena, v_arena, pages, cache_len, *,
     vb = gather_pages(v_arena, pages)
     return cached_decode_attention(p, cfg, q, kb, vb, cache_len,
                                    window=window)
+
+
+def cached_chunk_attention(p, cfg, q, k_cache, v_cache, q_positions, *,
+                           window: Optional[int]) -> jax.Array:
+    h = cfg.num_heads
+    hq = q.shape[2]
+    ke = expand_kv(k_cache, h, pad_to=hq)
+    ve = expand_kv(v_cache, h, pad_to=hq)
+    return chunk_decode_attention(q, ke, ve, q_positions, window=window)
+
+
+def paged_chunk_attention(p, cfg, q, k_arena, v_arena, pages, q_positions, *,
+                          window: Optional[int]) -> jax.Array:
+    """Block-table chunked prefill: gather the row's pages into position
+    order, then attend at each query's absolute position (same gathered
+    view and masking family as ``paged_decode_attention``)."""
+    kb = gather_pages(k_arena, pages)
+    vb = gather_pages(v_arena, pages)
+    return cached_chunk_attention(p, cfg, q, kb, vb, q_positions,
+                                  window=window)
 
 
 def naive_reference_attention(q, k, v, *, causal, window=None):

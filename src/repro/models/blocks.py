@@ -131,6 +131,63 @@ def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
     return x, new_cache
 
 
+def block_prefill_chunk(p, x, cache, cfg, kind: str, use_moe: bool,
+                        positions, write_pos, pages=None
+                        ) -> Tuple[jax.Array, Dict]:
+    """Chunked-prefill pass: C prompt tokens per row against the cache.
+
+    x [B,C,D]; ``positions`` [B,C] are the tokens' absolute positions
+    (rope + causal masking); ``write_pos`` [B,C] are the cache positions
+    their K/V scatter to — normally equal to ``positions``, but pad
+    lanes (a partial last chunk) and rows not advancing this round carry
+    the engine's drop sentinel (a huge positive index: out-of-range
+    writes drop in both layouts, and positive because JAX wraps negative
+    indices into valid cells).
+
+    K/V are scattered *before* attention reads the cache
+    (scatter-then-attend), so a query at position i always sees
+    positions <= i regardless of chunk partitioning — chunk-size
+    invariance is structural, not numeric luck. The cache's ``len``
+    vector is untouched: the prefill cursor is engine state.
+
+    Attention layers only: Mamba prefill is recurrent (state at i needs
+    the state at i-1, not the cache), so chunking it is a different
+    algorithm — the engine gates chunked mode to attention-pure archs.
+    """
+    if kind == "mamba":
+        raise ValueError("chunked prefill requires attention layers — "
+                         "mamba prefill is recurrent and cannot resume "
+                         "from a KV cache")
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_project(p["mixer"], cfg, h, positions)
+    if pages is not None:
+        k_cache = attn.scatter_page_tokens(cache["k"], pages, write_pos, k)
+        v_cache = attn.scatter_page_tokens(cache["v"], pages, write_pos, v)
+        y = attn.paged_chunk_attention(
+            p["mixer"], cfg, q, k_cache, v_cache, pages, positions,
+            window=_window_for(cfg, kind))
+    else:
+        rows = jnp.arange(x.shape[0])[:, None]
+        k_cache = cache["k"].at[rows, write_pos].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        v_cache = cache["v"].at[rows, write_pos].set(
+            v.astype(cache["v"].dtype), mode="drop")
+        y = attn.cached_chunk_attention(
+            p["mixer"], cfg, q, k_cache, v_cache, positions,
+            window=_window_for(cfg, kind))
+    y = attn.attention_out(p["mixer"], y, cfg.num_heads)
+    x = x + y
+
+    if "ffn" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if use_moe:
+            y, _ = moe_mod.moe_ffn(p["ffn"], h, cfg)
+        else:
+            y = mlp(p["ffn"], h, cfg.activation)
+        x = x + y
+    return x, {"k": k_cache, "v": v_cache}
+
+
 def period_layout(cfg):
     """[(kind, use_moe)] for one period, honoring moe.every_n_layers."""
     out = []

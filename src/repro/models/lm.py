@@ -294,6 +294,60 @@ class LM:
               else jnp.asarray(0, jnp.int32))
         return {"periods": periods, "leftover": leftover, "len": ln}
 
+    def prefill_chunk(self, params, cache, tokens, positions, write_pos
+                      ) -> Tuple[jax.Array, PyTree]:
+        """One chunk of continuous (chunked) prefill against the decode
+        cache. Returns (logits [B,C,V], new cache).
+
+        ``tokens`` [B,C] are the next C prompt tokens of each row;
+        ``positions`` [B,C] their absolute positions; ``write_pos``
+        [B,C] the cache positions the K/V scatter to (the engine's drop
+        sentinel for pad lanes / rows not advancing). Unlike
+        ``decode_step`` the cache ``len`` vector does NOT advance — the
+        prefill cursor is engine-owned state, and the decode scan that
+        shares the dispatch still reads ``len`` for its own rows. The
+        block table (``pages``) passes through untouched as in decode.
+        Attention archs only (blocks.block_prefill_chunk raises on
+        mamba); the engine gates accordingly.
+        """
+        cfg = self.cfg
+        pages = cache.get("pages")
+        x = embed(params["embed"], tokens).astype(cfg.dtype)
+        if getattr(cfg, "scale_embeddings", False):
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        x = constrain_batch(x)
+
+        def scan_body(x, pc):
+            period_params, period_cache = pc
+            new_caches = {}
+            for j, (kind, use_moe) in enumerate(self.layout):
+                x, nc = blocks.block_prefill_chunk(
+                    period_params[f"layer_{j}"], x,
+                    period_cache[f"layer_{j}"], cfg, kind, use_moe,
+                    positions, write_pos, pages=pages)
+                new_caches[f"layer_{j}"] = nc
+            return x, new_caches
+
+        x, new_period_caches = jax.lax.scan(
+            scan_body, x, (params["periods"], cache["periods"]))
+
+        new_leftover = {}
+        for j in range(len(self.leftover)):
+            kind, use_moe = self.layout[j]
+            x, nc = blocks.block_prefill_chunk(
+                params["leftover"][f"layer_{j}"], x,
+                cache["leftover"][f"layer_{j}"], cfg, kind, use_moe,
+                positions, write_pos, pages=pages)
+            new_leftover[f"layer_{j}"] = nc
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._unembed(params, x)                # [B, C, V]
+        new_cache = {"periods": new_period_caches, "leftover": new_leftover,
+                     "len": cache["len"]}
+        if pages is not None:
+            new_cache["pages"] = pages
+        return logits, new_cache
+
     def decode_step(self, params, cache, token_or_embed
                     ) -> Tuple[jax.Array, PyTree]:
         """One decode step. Returns (logits [B,V], new cache).

@@ -38,9 +38,11 @@ are handed (per-slot ``len`` vectors; models/blocks.block_decode).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,10 +50,19 @@ import numpy as np
 
 from repro.serve.kv_pages import PagedSlotPool, PrefixIndex
 from repro.serve.kv_slots import SlotPool
-from repro.serve.scheduler import AdmissionController, allocator_contention
+from repro.serve.scheduler import (AdmissionController,
+                                   allocator_contention, plan_round)
 from repro.sync import SyncLibrary
 
 PyTree = Any
+
+#: Write-drop sentinel for chunked prefill: pad lanes of a partial last
+#: chunk (and rows not advancing this round) carry this as their cache
+#: write position. Large and POSITIVE — past any block table (the paged
+#: scatter maps it to the sentinel page) and past any contiguous row
+#: (``mode="drop"``); a negative position would be *wrapped* into a
+#: valid cell by JAX's index semantics, silently corrupting live KV.
+_DROP_POS = 2 ** 30
 
 
 @dataclasses.dataclass
@@ -128,6 +139,9 @@ class ServeRequest:
     #: the regenerated stream identical). Its original grant keeps the
     #: wait-time stats and the one FIFO grant-log entry.
     preemptions: int = 0
+    #: chunked-prefill rounds this request's prompt consumed (0 when the
+    #: engine prefilled it in one shot); cumulative across preemptions
+    prefill_chunks: int = 0
     out_tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -168,6 +182,24 @@ class SlotServeEngine:
     "spin_backoff", "sleeping") or selects ``"adaptive"`` — re-resolved
     between rounds from the measured contended-acquire fraction.
 
+    ``prefill_chunk_tokens`` (DESIGN.md §12) turns on *continuous
+    chunked prefill*: admission becomes pure bookkeeping (slot + pages
+    + a prefill cursor — no model dispatch), and each scheduler round's
+    single jitted dispatch carries a C-token prefill sub-step for the
+    FIFO-oldest prefilling slots alongside the decode scan.
+    ``round_token_budget`` caps how much prefill a round carries
+    (``scheduler.plan_round``: decode rows are funded first and never
+    displaced; leftover budget funds chunks). The dispatch stays fixed
+    shape with exactly two traces — ``chunk ∈ {0, C}`` — so rounds
+    never retrace as the prefill/decode mix shifts, and chunking adds
+    zero allocator acquires per round (chunk page demand folds into
+    the existing top-up batch). Gated like lazy growth to greedy
+    decoding + attention-only archs (silently off otherwise): greedy
+    token streams are identical to one-shot prefill, and chunk
+    partitioning cannot change results (each chunk scatters K/V into
+    the cache *first*, then attends to the gathered view — the same
+    computation whatever the chunk boundaries).
+
     ``prefix_sharing`` ("auto"/"on"/"off", DESIGN.md §11) adds
     copy-on-write prompt-prefix sharing on the paged layout: admission
     looks the new prompt up in a :class:`PrefixIndex` (longest live
@@ -202,6 +234,8 @@ class SlotServeEngine:
                  page_lookahead_chunks: int = 2,
                  allocator_wait: Optional[str] = None,
                  prefix_sharing: str = "auto",
+                 prefill_chunk_tokens: Optional[int] = None,
+                 round_token_budget: Optional[int] = None,
                  sync: Optional[SyncLibrary] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.frontend is not None:
@@ -245,6 +279,29 @@ class SlotServeEngine:
                                      or temperature > 0.0):
             page_growth = "eager"
         self.page_growth = page_growth if kv_layout == "paged" else "eager"
+        # Continuous chunked prefill (DESIGN.md §12): prompts are admitted
+        # as bookkeeping only and prefilled C tokens per scheduler round
+        # *inside* the decode dispatch, so one long prompt never stalls
+        # in-flight decodes for a whole-prompt prefill. Gated like lazy
+        # growth: attention-only archs (mamba prefill is recurrent — it
+        # cannot resume from a KV cursor) and greedy decoding (a chunked
+        # prompt's first token is sampled at completion, a different key
+        # order than one-shot; only argmax keeps streams comparable).
+        chunk = int(prefill_chunk_tokens) if prefill_chunk_tokens else 0
+        if chunk < 0:
+            raise ValueError("prefill_chunk_tokens must be >= 1 (or None)")
+        if chunk and (not self._can_pad or temperature > 0.0):
+            chunk = 0
+        self.prefill_chunk = chunk
+        # per-round token budget the planner fills: decode rows first,
+        # then prefill chunks (scheduler.plan_round). The chunked
+        # dispatch computes all K rows at fixed [K, C] shape whether or
+        # not they advance, so the default funds every slot — a chunk
+        # costs pages, not compute — and a smaller budget is the
+        # explicit throttle (it paces page demand, FIFO-fairly).
+        self.round_token_budget = (
+            int(round_token_budget) if round_token_budget
+            else capacity * (decode_chunk + chunk))
         if prefix_sharing not in ("auto", "on", "off"):
             raise ValueError(
                 f"unknown prefix_sharing {prefix_sharing!r}; "
@@ -286,7 +343,10 @@ class SlotServeEngine:
         self.prefix_index = (PrefixIndex(self.pool.page_size,
                                          self.pool.pages)
                              if self.prefix_sharing else None)
-        self.queue: List[ServeRequest] = []
+        # deque: admission pops the FIFO head and preemption pushes the
+        # victim back in O(1) — a list's pop(0) shifts the whole backlog
+        # on every admission (quadratic over a burst)
+        self.queue: Deque[ServeRequest] = collections.deque()
         self.active: Dict[int, ServeRequest] = {}      # slot -> request
         self.finished: List[ServeRequest] = []
         self.grant_log: List[int] = []                 # rids in grant order
@@ -297,10 +357,26 @@ class SlotServeEngine:
         self.prefix_hits = 0     # admissions that adopted a live prefix
         self.shared_pages_adopted = 0   # pages incref'd instead of alloc'd
         self.cow_splits = 0      # private copies made on divergent writes
+        self.prefill_tokens = 0  # real prompt tokens prefilled
+        self.pad_tokens = 0      # pad lanes prefill dispatches computed
+        self.prefill_chunks = 0  # chunked-prefill row-rounds dispatched
+        #: one-shot mode only: rounds where a whole-prompt prefill
+        #: dispatch ran while at least one admitted request was decoding
+        #: (the decode stall chunking exists to remove — structurally 0
+        #: in chunked mode, where admission is bookkeeping and prefill
+        #: rides the decode dispatch)
+        self.decode_rounds_stalled_by_prefill = 0
 
         self._next_rid = 0
         self._last_tok = np.zeros(capacity, np.int32)
         self._steps_left = np.zeros(capacity, np.int64)
+        # chunked-prefill cursor state machine, per slot: a slot is
+        # *prefilling* while _pf_pos < _pf_end (pos = tokens already in
+        # cache, end = prompt length); both zero otherwise. Transitions:
+        # admitted (pos=adopted prefix, end=lp) → prefilling, +C per
+        # granted chunk → decoding (pos=end, both reset to 0) → retired.
+        self._pf_pos = np.zeros(capacity, np.int64)
+        self._pf_end = np.zeros(capacity, np.int64)
         # the slot's lazy top-up cap: the exact flat positions its
         # request can touch (prompt + max_new - 1 — the last decode
         # writes at position len = prompt+max_new-2 and attends one
@@ -311,6 +387,8 @@ class SlotServeEngine:
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("pad_to",))
         self._chunk = jax.jit(self._chunk_impl, static_argnames=("steps",))
+        self._round = jax.jit(self._round_impl,
+                              static_argnames=("steps", "chunk"))
 
     # ------------------------------------------------------------ jitted fns
     def _prefill_impl(self, params, tokens, length, *, pad_to):
@@ -355,6 +433,35 @@ class SlotServeEngine:
         (cache, tok, frozen), toks = jax.lax.scan(
             body, (cache, last_tok, frozen), keys)
         return cache, tok, toks                        # toks [steps, K]
+
+    def _round_impl(self, params, cache, last_tok, frozen,
+                    pf_tok, pf_qpos, pf_wpos, key, *, steps, chunk):
+        """One chunked-mode round under ONE dispatch: an optional
+        ``chunk``-token prefill sub-step over all K rows (rows not
+        advancing carry ``_DROP_POS`` write positions and contribute
+        nothing), then the same ``steps``-iteration decode scan as
+        ``_chunk_impl``. Static shape is ``(steps, chunk)`` and the
+        engine only ever passes ``chunk ∈ {0, C}`` — pure-decode rounds
+        take the 0 trace — so scheduler rounds never retrace as the
+        prefill/decode mix shifts.
+
+        Order matters: the decode scan runs FIRST. A frozen prefilling
+        row still computes its decode steps, scattering scratch K/V at
+        ``[cursor, cursor+steps)`` — exactly where this round's chunk
+        writes — so the chunk's scatter must land after the scratch to
+        overwrite it. The invariant: at every chunk's attention,
+        ``[0, cursor+v)`` holds real K/V (earlier chunks wrote
+        ``[0, cursor)``, this chunk just wrote ``[cursor, cursor+v)``,
+        and scratch beyond is masked by ``kpos <= qpos``); the host then
+        rolls the length vector back to the advanced cursor after
+        adoption."""
+        cache, tok, toks = self._chunk_impl(
+            params, cache, last_tok, frozen, key, steps=steps)
+        pf_logits = None
+        if chunk:
+            pf_logits, cache = self.model.prefill_chunk(
+                params, cache, pf_tok, pf_qpos, pf_wpos)
+        return cache, tok, toks, pf_logits
 
     # ------------------------------------------------------------ submission
     def submit(self, prompt, max_new_tokens: int,
@@ -444,6 +551,9 @@ class SlotServeEngine:
         from each other (the donor's pages exist only after its
         insert); the index warms for the next round.
         """
+        if self.prefill_chunk:
+            return self._admit_chunked()
+        had_decoders = bool(self.active)
         n_admit = self._planned_admit_count()
         staged = []    # (req, slot, lp, bucket, reserve, grant, sh_ids, sh_len)
         staged_pages = 0
@@ -481,12 +591,12 @@ class SlotServeEngine:
                             shared_pages=n_shared))
                 if not fits:
                     break
-            self.queue.pop(0)
+            self.queue.popleft()
             # Algorithm-5 wait(): never blocks here because the kernel
             # only granted as many requests as there are free slots —
             # the planner and the gate agree by construction.
             if not self.admission.acquire_slot(timeout=5.0):
-                self.queue.insert(0, req)
+                self.queue.appendleft(req)
                 break
             slot = self.pool.acquire(req.rid)
             staged.append((req, slot, lp, bucket, reserve, grant,
@@ -517,6 +627,8 @@ class SlotServeEngine:
             logits, cache = self._prefill(
                 self.params, jnp.asarray(padded)[None, :], length,
                 pad_to=bucket if self.kv_layout == "paged" else self.max_len)
+            self.prefill_tokens += lp
+            self.pad_tokens += bucket - lp
             self._key, sub = jax.random.split(self._key)
             tok0 = int(self._sample(logits, sub)[0])
             if self.kv_layout == "paged":
@@ -549,6 +661,134 @@ class SlotServeEngine:
             if req.eos or self._steps_left[slot] <= 0:
                 instant.append((slot, 0))
         self._retire_batch(instant)
+        if had_decoders:
+            # this round's decode dispatch waited for len(staged)
+            # whole-prompt prefill dispatches — the stall chunked
+            # prefill removes
+            self.decode_rounds_stalled_by_prefill += 1
+        return len(staged)
+
+    def _admit_chunked(self) -> int:
+        """Chunked-mode admission: pure bookkeeping, NO model dispatch.
+
+        A granted request gets a slot, pages for its first chunk(s), and
+        a prefill cursor — the chunks themselves ride later rounds'
+        decode dispatches. Because nothing is prefilled here, admission
+        happens rounds earlier under page pressure than the one-shot
+        path (which must afford the whole prompt bucket up front); that
+        earlier grant_step is the p99 queue-wait win.
+
+        Page sizing under lazy growth is two-tier: try a *generous*
+        grant first (the whole prompt plus the decode lookahead — lock
+        parity with one-shot when pages are abundant), fall back to
+        just the first chunk when the watermark would block it (the
+        early-admission win when pages are scarce; later chunks ride
+        the per-round top-up's existing acquire).
+
+        Prefix adoption keys the index by ``schedule=C`` (one-shot
+        entries use 0) — chunk boundaries are canonical multiples of C,
+        so same-C donors are bit-identical by construction and
+        schedules never cross-adopt. The adopted prefix is trimmed to a
+        multiple of lcm(page_size, C): adoption means *skipping whole
+        chunks*, keeping every resumed chunk canonically aligned. The
+        last chunk always stays private — the completion logits must
+        come from a chunk this engine runs.
+        """
+        n_admit = self._planned_admit_count()
+        staged = []           # (req, slot, lp, sh_ids, sh_len)
+        staged_pages = 0
+        C = self.prefill_chunk
+        lazy = self.kv_layout == "paged" and self.page_growth == "lazy"
+        while len(staged) < n_admit and self.queue and self.pool.n_free:
+            req = self.queue[0]
+            lp = int(req.prompt.size)
+            need = max(lp + req.max_new_tokens - 1, lp)
+            reserve = lp + req.max_new_tokens + 1
+            sh_len, sh_ids = ((self.prefix_index.lookup(
+                                   req.prompt, 0, schedule=C)
+                               if self.prefix_sharing else (0, None)))
+            if sh_ids is not None:
+                ps = self.pool.page_size
+                align = ps * C // math.gcd(ps, C)
+                keep = (min(sh_len, lp - 1) // align) * align
+                n_keep = keep // ps
+                if n_keep <= 0:
+                    sh_len, sh_ids = 0, None
+                else:
+                    sh_ids, sh_len = sh_ids[:n_keep], keep
+            n_shared = 0 if sh_ids is None else int(sh_ids.size)
+            if self.kv_layout == "paged":
+                first = min(sh_len + C, need)
+                window = min(sh_len + C * self.page_lookahead_chunks, need)
+                generous = min(max(lp, first)
+                               + self.decode_chunk
+                               * self.page_lookahead_chunks, need)
+                grant = None
+                if lazy:
+                    # tiered grant: whole prompt + decode lookahead when
+                    # pages allow (lock parity with one-shot: later
+                    # chunks find their pages pre-granted), else a
+                    # chunk-lookahead window, else just the first chunk
+                    # — the early-admission win when pages are scarce
+                    for g in (generous, window, first):
+                        if self.pool.can_admit_lazy(
+                                g, reserve,
+                                headroom_pages=self._headroom_pages(),
+                                pending_pages=staged_pages,
+                                shared_pages=n_shared):
+                            grant = g
+                            break
+                elif self.pool.can_reserve(reserve,
+                                           pending_pages=staged_pages,
+                                           shared_pages=n_shared):
+                    grant = reserve
+                if grant is None:
+                    break
+            else:
+                grant = 0
+            self.queue.popleft()
+            if not self.admission.acquire_slot(timeout=5.0):
+                self.queue.appendleft(req)
+                break
+            slot = self.pool.acquire(req.rid)
+            staged.append((req, slot, lp, grant, sh_ids, sh_len))
+            if self.kv_layout == "paged":
+                staged_pages += max(
+                    self.pool.pages.pages_for(grant) - n_shared, 0)
+        if not staged:
+            return 0
+
+        # the one allocator critical section admission costs — same as
+        # one-shot (private grants and shared-prefix increfs together)
+        if self.kv_layout == "paged":
+            grants = self.pool.reserve_batch(
+                [(slot, grant) for (_, slot, _, grant, _, _) in staged],
+                shared=[sh_ids for (*_, sh_ids, _) in staged])
+        else:
+            grants = [None] * len(staged)
+
+        for (req, slot, lp, grant, sh_ids, sh_len), ids in zip(staged,
+                                                               grants):
+            if self.kv_layout == "paged":
+                self.pool.assign(slot, ids=ids, shared_ids=sh_ids,
+                                 length=sh_len)
+                if (self.prefix_sharing and sh_ids is not None
+                        and sh_ids.size):
+                    self.prefix_hits += 1
+                    self.shared_pages_adopted += int(sh_ids.size)
+            else:
+                self.pool.assign(slot, length=sh_len)
+            self._pf_pos[slot] = sh_len        # adoption = skipped chunks
+            self._pf_end[slot] = lp
+            self._last_tok[slot] = 0
+            self._steps_left[slot] = req.max_new_tokens - 1
+            self._grow_cap[slot] = max(lp + req.max_new_tokens - 1, lp)
+            req.slot = slot
+            if req.preemptions == 0 or req.grant_step < 0:
+                req.grant_step = self.step_clock
+                req.grant_s = time.perf_counter()
+                self.grant_log.append(req.rid)
+            self.active[slot] = req
         return len(staged)
 
     def _retire_batch(self, pairs: List[Tuple[int, int]]) -> None:
@@ -587,12 +827,14 @@ class SlotServeEngine:
         self.admission.release_slot()
         self._steps_left[slot] = 0
         self._grow_cap[slot] = 0
+        self._pf_pos[slot] = 0                 # chunked: restart the prompt
+        self._pf_end[slot] = 0                 # cursor from scratch too
         req.slot = -1
         req.eos = False
         req.out_tokens = []
         req.preemptions += 1
         self.preemptions += 1
-        self.queue.insert(0, req)              # FIFO: it predates the queue
+        self.queue.appendleft(req)             # FIFO: it predates the queue
 
     def _split_plan(self, order: List[int], lens: np.ndarray,
                     steps: int) -> List[Tuple[int, int]]:
@@ -627,40 +869,72 @@ class SlotServeEngine:
             plan.extend(writers)
         return plan
 
-    def _grow_for_chunk(self, steps: int) -> set:
+    def _prefilling(self, slot: int) -> bool:
+        return self._pf_pos[slot] < self._pf_end[slot]
+
+    def _grow_for_chunk(self, steps: int,
+                        chunk_rows: Tuple[int, ...] = ()) -> Tuple[set, set]:
         """The per-round page-prep pass: ONE allocator critical section
-        covers both the lazy top-ups (every active slot up to the pages
+        covers the lazy top-ups (every decoding slot up to the pages
         this chunk's writes and reads need, capped at the
-        admission-time worst case) and the CoW splits (a private copy
-        for every shared page some slot is about to write —
-        ``PagedSlotPool.prepare_batch``).
+        admission-time worst case; every *planned prefill chunk* up to
+        its coming chunk window, capped at the prompt length), and the
+        CoW splits (a private copy for every shared page some decoding
+        slot is about to write — ``PagedSlotPool.prepare_batch``).
+        Chunked-prefill page demand adds NO critical section: its items
+        fold into the same batch.
+
+        Prefilling rows never need splits: their private writes start
+        past any adopted prefix, and their pages only enter the prefix
+        index at completion, so the coming chunk can never target a
+        shared page.
 
         Grants go oldest-grant-first, splits after; when the pool
-        cannot cover a slot's top-up *or* its split, the slot *pauses*
-        for the round (frozen row: emits nothing, its length rolls
-        back after the dispatch, and its block-table row is
+        cannot cover a decoding slot's top-up *or* its split, the slot
+        *pauses* for the round (frozen row: emits nothing, its length
+        rolls back after the dispatch, and its block-table row is
         sentinel-masked so the dispatch cannot write the still-shared
-        page). If nobody can decode — the overflow case over-commit
-        admission makes possible — the youngest grant is evicted back
-        to the queue (eviction-safe: restart, not corruption) until
-        someone can. Returns the set of paused slots; at least one
-        active slot is always decodable on return.
+        page). A planned chunk whose pages starve is *deferred* (full
+        chunk or nothing — partial advancement would break canonical
+        chunk alignment), never partially advanced. If nobody can
+        decode and no chunk can advance, the youngest grant is evicted
+        back to the queue (eviction-safe: restart, not corruption)
+        until someone can. Returns ``(paused_decode_slots,
+        advancing_chunk_slots)``; some row always makes progress on
+        return while any remain.
         """
         lazy = self.page_growth == "lazy"
+        chunk_set = set(chunk_rows)
         if not self.active or (not lazy and not self.prefix_sharing):
-            return set()
+            # eager growth pre-reserved every page at admission
+            return set(), chunk_set
+        C = max(self.prefill_chunk, 1)
         ps = self.pool.page_size
         lens = np.asarray(self.pool.lens)
         order = sorted(self.active, key=lambda s: self.active[s].rid)
         while order:
+            decode_live = [s for s in order if not self._prefilling(s)]
+            chunk_live = [s for s in order if s in chunk_set]
             # prefetch a lookahead window per grow acquire; fall back to
             # just-this-chunk when the pool is under the watermark so a
             # speculative grant never starves a must-have one
             tight = self.pool.pages.n_free <= self._headroom_pages()
-            horizon = steps * (1 if tight else self.page_lookahead_chunks)
-            items = ([(s, int(min(lens[s] + horizon, self._grow_cap[s])))
-                      for s in order] if lazy else [])
-            splits = (self._split_plan(order, lens, steps)
+            look = 1 if tight else self.page_lookahead_chunks
+            items = []
+            if lazy:
+                for s in order:
+                    if self._prefilling(s):
+                        if s not in chunk_set:
+                            # deferred backlog rows need no pages: their
+                            # frozen decode-scan writes drop/overwrite
+                            continue
+                        target = min(int(self._pf_pos[s]) + C * look,
+                                     int(self._pf_end[s]))
+                    else:
+                        target = int(min(lens[s] + steps * look,
+                                         self._grow_cap[s]))
+                    items.append((s, target))
+            splits = (self._split_plan(decode_live, lens, steps)
                       if self.prefix_sharing else [])
             _, split_ok = self.pool.prepare_batch(items, splits)
             self.cow_splits += sum(bool(ok) for ok in split_ok)
@@ -668,13 +942,21 @@ class SlotServeEngine:
             # lookahead tail is not a reason to stall the row) or when
             # a split it needs starved — the shared page stays read-only
             paused = {
-                s for s in order
+                s for s in decode_live
                 if self.pool.held_pages(s) * ps
                 < min(lens[s] + steps, self._grow_cap[s])}
             paused |= {s for (s, _), ok in zip(splits, split_ok) if not ok}
-            if len(paused) < len(order):
+            starved = {
+                s for s in chunk_live
+                if self.pool.held_pages(s) * ps
+                < min(int(self._pf_pos[s]) + C, int(self._pf_end[s]))}
+            if not decode_live and not chunk_live:
+                # nothing planned to advance — nothing to preempt for
+                return paused, set()
+            if len(paused) < len(decode_live) or len(starved) < len(
+                    chunk_live):
                 self.pauses += len(paused)
-                return paused
+                return paused, chunk_set - starved
             # a lone slot can always grow (held + need <= max_pages_per_
             # slot <= num_pages) and never needs a split (refcount > 1
             # implies a second live holder), so preemption strictly
@@ -682,7 +964,9 @@ class SlotServeEngine:
             victim = max(order, key=lambda s: self.active[s].rid)
             self._preempt(victim)
             order.remove(victim)
-        return set()
+            chunk_set.discard(victim)
+            lens = np.asarray(self.pool.lens)
+        return set(), set()
 
     # ------------------------------------------------------------ decode loop
     def step(self) -> int:
@@ -701,13 +985,33 @@ class SlotServeEngine:
         if not self.active:
             return 0
         steps = self.decode_chunk
-        paused = (self._grow_for_chunk(steps)
-                  if self.kv_layout == "paged" else set())
+        chunked = self.prefill_chunk > 0
+        planned: List[int] = []
+        if chunked:
+            # token-budget round plan: decode rows first, then
+            # fixed-size chunks for the FIFO-oldest prefilling slots
+            backlog = sorted(
+                (s for s in self.active if self._prefilling(s)),
+                key=lambda s: self.active[s].rid)
+            decode_rows = [s for s in self.active
+                           if not self._prefilling(s)]
+            planned = plan_round(
+                self.round_token_budget, decode_rows, backlog,
+                chunk_tokens=self.prefill_chunk,
+                decode_chunk=steps).chunk_rows
+        if self.kv_layout == "paged":
+            paused, advancing = self._grow_for_chunk(steps, tuple(planned))
+        else:
+            paused, advancing = set(), set(planned)
         if not self.active:                    # everything preempted away
             return 0
+        chunk_rows = [s for s in planned
+                      if s in advancing and s in self.active]
+        pf_rows = ([s for s in self.active if self._prefilling(s)]
+                   if chunked else [])
         frozen = np.ones(self.capacity, bool)
         for slot in self.active:
-            if slot not in paused:
+            if slot not in paused and not self._prefilling(slot):
                 frozen[slot] = False
         lens_before = np.asarray(self.pool.lens) if paused else None
         view = self.pool.cache_view()
@@ -720,26 +1024,86 @@ class SlotServeEngine:
             # dropped position before its first read
             view["pages"] = self.pool.masked_table(paused)
         self._key, sub = jax.random.split(self._key)
-        cache, tok, toks = self._chunk(
-            self.params, view,
-            jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
-            steps=steps)
+        if chunked:
+            C = self.prefill_chunk
+            pf_tok = np.zeros((self.capacity, C), np.int32)
+            pf_qpos = np.zeros((self.capacity, C), np.int32)
+            pf_wpos = np.full((self.capacity, C), _DROP_POS, np.int32)
+            valid: Dict[int, int] = {}
+            for s in chunk_rows:
+                p0 = int(self._pf_pos[s])
+                v = int(min(C, self._pf_end[s] - p0))
+                pf_tok[s, :v] = self.active[s].prompt[p0:p0 + v]
+                pf_qpos[s, :] = p0 + np.arange(C)
+                pf_wpos[s, :v] = p0 + np.arange(v)
+                valid[s] = v
+            cache, tok, toks, pf_logits = self._round(
+                self.params, view,
+                jnp.asarray(self._last_tok), jnp.asarray(frozen),
+                jnp.asarray(pf_tok), jnp.asarray(pf_qpos),
+                jnp.asarray(pf_wpos), sub,
+                steps=steps, chunk=C if chunk_rows else 0)
+        else:
+            cache, tok, toks = self._chunk(
+                self.params, view,
+                jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
+                steps=steps)
+            pf_logits = None
         self.decode_dispatches += 1
         self.pool.adopt(cache)
         self._last_tok = np.array(tok)     # writable copy (inserts mutate)
         toks = np.asarray(toks)                        # [steps, K]
-        if paused:
-            # roll paused rows' lengths back: their frozen-token scatters
-            # land again (identically) on resume before anything reads
-            # them, so the length vector is the only state to rewind
+
+        # advance prefill cursors for the chunks that rode this dispatch
+        completions: List[Tuple[int, int]] = []
+        for s in chunk_rows:
+            v = valid[s]
+            self._pf_pos[s] += v
+            self.prefill_chunks += 1
+            self.prefill_tokens += v
+            self.pad_tokens += self.prefill_chunk - v
+            self.active[s].prefill_chunks += 1
+            if self._pf_pos[s] >= self._pf_end[s]:
+                completions.append((s, v))
+        if paused or pf_rows:
+            # roll lengths back: paused rows to before the dispatch,
+            # prefilling rows to their cursor (the decode scan advanced
+            # every row; its scratch writes for these rows land again —
+            # identically or rewritten — before anything reads them, so
+            # the length vector is the only state to rewind)
             lens = np.array(self.pool.lens)
-            idx = list(paused)
-            lens[idx] = lens_before[idx]
+            for s in pf_rows:
+                lens[s] = int(self._pf_pos[s])
+            if paused:
+                idx = list(paused)
+                lens[idx] = lens_before[idx]
             self.pool.set_lens(jnp.asarray(lens))
 
         retire: List[Tuple[int, int]] = []
+        pf_skip = set(pf_rows)
+        for s, v in completions:
+            # prompt fully cached: sample the first output token from
+            # the chunk's last real lane — the prefilling → decoding
+            # transition
+            req = self.active[s]
+            self._key, sub2 = jax.random.split(self._key)
+            tok0 = int(self._sample(pf_logits[s, v - 1][None, :], sub2)[0])
+            self._last_tok[s] = tok0
+            req.out_tokens.append(tok0)
+            if self.eos_id is not None and tok0 == self.eos_id:
+                req.eos = True
+            if self.kv_layout == "paged" and self.prefix_sharing:
+                self.prefix_index.register(
+                    req.prompt, 0,
+                    self.pool.page_ids(
+                        s, self.pool.pages.pages_for(int(self._pf_end[s]))),
+                    schedule=self.prefill_chunk)
+            self._pf_pos[s] = 0
+            self._pf_end[s] = 0
+            if req.eos or self._steps_left[s] <= 0:
+                retire.append((s, 0))
         for slot in list(self.active):
-            if slot in paused:
+            if slot in paused or slot in pf_skip:
                 continue
             req = self.active[slot]
             done_at = None
@@ -787,6 +1151,18 @@ class SlotServeEngine:
                            if len(fin) else 0.0),
             "semaphore_admitted": float(self.admission.admitted),
             "semaphore_completed": float(self.admission.completed),
+            # chunked-prefill ledger (meaningful in both modes: one-shot
+            # pads prompts to buckets, chunked pads only the last chunk)
+            "prefill_chunk_tokens": float(self.prefill_chunk),
+            "round_token_budget": float(self.round_token_budget),
+            "prefill_tokens": float(self.prefill_tokens),
+            "pad_tokens": float(self.pad_tokens),
+            "pad_fraction": (
+                float(self.pad_tokens)
+                / float(max(self.prefill_tokens + self.pad_tokens, 1))),
+            "prefill_chunks": float(self.prefill_chunks),
+            "decode_rounds_stalled_by_prefill": float(
+                self.decode_rounds_stalled_by_prefill),
         }
         if self.kv_layout == "paged":
             pp = self.pool.pages

@@ -575,10 +575,19 @@ class PrefixIndex:
         return out
 
     @staticmethod
-    def _key(digest: bytes, bucket: int) -> bytes:
-        return digest + int(bucket).to_bytes(4, "little")
+    def _key(digest: bytes, bucket: int, schedule: int = 0) -> bytes:
+        # ``schedule`` extends the shape-identity suffix for chunked
+        # prefill: 0 = one-shot (bucketed) prefill, C = chunked at C
+        # tokens per chunk. Chunk boundaries are canonical multiples of
+        # C, so two prompts prefilled at the same C compute
+        # bit-identical K/V for a shared prefix — but a chunked donor's
+        # bits are NOT the one-shot bits (different attention
+        # reduction), so the two schedules must never cross-adopt.
+        return (digest + int(bucket).to_bytes(4, "little")
+                + int(schedule).to_bytes(4, "little"))
 
-    def register(self, tokens, bucket: int, page_ids) -> int:
+    def register(self, tokens, bucket: int, page_ids,
+                 schedule: int = 0) -> int:
         """Publish a freshly inserted prompt's prefixes. ``page_ids``
         are the slot's table entries covering the prompt (shared pages
         it adopted followed by its own — both are valid donors, which is
@@ -593,7 +602,7 @@ class PrefixIndex:
             n = -(-length // ps)
             if n > page_ids.size:
                 break
-            key = self._key(digest, bucket)
+            key = self._key(digest, bucket, schedule)
             cur = self._entries.get(key)
             if cur is not None and self.pool.entry_valid(cur[0], cur[1]):
                 continue
@@ -602,14 +611,15 @@ class PrefixIndex:
             written += 1
         return written
 
-    def lookup(self, tokens, bucket: int) -> Tuple[int, Optional[np.ndarray]]:
+    def lookup(self, tokens, bucket: int, schedule: int = 0
+               ) -> Tuple[int, Optional[np.ndarray]]:
         """Longest live match: ``(shared_len, page_ids)`` such that the
         first ``shared_len`` positions of ``tokens`` are already held in
         ``page_ids`` by some live request, or ``(0, None)``. The caller
         must incref the returned pages (under its admission critical
         section) before anything else can retire the donor."""
         for length, digest in reversed(self._digests(tokens)):
-            key = self._key(digest, bucket)
+            key = self._key(digest, bucket, schedule)
             ent = self._entries.get(key)
             if ent is None:
                 continue
@@ -1089,6 +1099,32 @@ class PagedSlotPool:
             self.arena, self.lens, req, jnp.asarray(ids[:n_data]),
             jnp.asarray(slot, jnp.int32), jnp.asarray(length, jnp.int32),
             skip=n_shared)
+
+    def assign(self, slot: int, ids: Optional[np.ndarray] = None,
+               shared_ids: Optional[np.ndarray] = None,
+               length: int = 0) -> None:
+        """Place pre-granted pages in ``slot``'s block table WITHOUT
+        scattering any prefill data — the chunked-prefill admission:
+        there is no prefilled request cache yet, the coming chunk
+        dispatches write K/V directly into the arena at the slot's
+        cursor. ``shared_ids`` (a prefix adoption, already incref'd by
+        ``reserve_batch(shared=...)``) go at the table head exactly as
+        :meth:`insert` places them; ``length`` initializes the slot's
+        length vector entry — the adopted-prefix extent, so the decode
+        scan sharing the prefill dispatch masks the row consistently."""
+        ids = (np.zeros(0, np.int32) if ids is None
+               else np.asarray(ids, np.int32).reshape(-1))
+        shared_ids = (np.zeros(0, np.int32) if shared_ids is None
+                      else np.asarray(shared_ids, np.int32).reshape(-1))
+        n_sh, n_priv = int(shared_ids.size), int(ids.size)
+        if n_sh + n_priv > self.max_pages_per_slot:
+            raise ValueError(
+                f"{n_sh} shared + {n_priv} private pages exceed "
+                f"max_pages_per_slot {self.max_pages_per_slot}")
+        self._tables[slot, :n_sh] = shared_ids
+        self._tables[slot, n_sh:n_sh + n_priv] = ids
+        self._tables[slot, n_sh + n_priv:] = self.pages.num_pages
+        self.lens = self.lens.at[int(slot)].set(int(length))
 
     # ----------------------------------------------------- contention signal
     def retune(self) -> Optional[Any]:

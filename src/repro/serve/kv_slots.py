@@ -157,6 +157,14 @@ class SlotPool:
             self.arena, self.lens, req,
             jnp.asarray(slot, jnp.int32), jnp.asarray(length, jnp.int32))
 
+    def assign(self, slot: int, length: int = 0) -> None:
+        """Initialize ``slot`` for chunked prefill without writing the
+        arena: the chunk dispatches scatter K/V directly into the slot's
+        row at the engine's cursor, so admission only has to reset the
+        length vector (the stale row beyond ``length`` is rewritten
+        before anything reads it — scatter-then-attend)."""
+        self.lens = self.lens.at[int(slot)].set(int(length))
+
     def cache_view(self) -> PyTree:
         """The arena in model-cache form (arena leaves + 'len' vector)."""
         out = dict(self.arena)

@@ -23,9 +23,10 @@ reported in benchmarks/serving.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -127,6 +128,49 @@ class AdmissionController:
 
 
 @dataclasses.dataclass
+class RoundPlan:
+    """One scheduler round's token-budget split (``plan_round``)."""
+    decode_tokens: int          # tokens the round's decode rows consume
+    chunk_rows: List[int]       # FIFO prefix of the backlog granted a chunk
+    deferred: int               # backlog rows the budget pushed to next round
+
+    @property
+    def chunk_tokens_planned(self) -> int:
+        return 0 if not self.chunk_rows else len(self.chunk_rows)
+
+
+def plan_round(budget: int, decode_rows: Sequence[int],
+               prefill_backlog: Sequence[int], *, chunk_tokens: int,
+               decode_chunk: int = 1) -> RoundPlan:
+    """Fill one round's token budget: decode rows first, then fixed-size
+    prefill chunks from the partially-prefilled backlog.
+
+    Decode rows are never displaced — every in-flight decode advances
+    ``decode_chunk`` tokens each round regardless of the budget (the
+    budget throttles *prefill* admission into the dispatch, which is
+    what keeps a long prompt from monopolizing rounds). The leftover
+    budget funds ``chunk_tokens``-sized prefill chunks, granted to the
+    FIFO prefix of ``prefill_backlog`` — callers pass the backlog in
+    admission-grant order, so the semaphore's FIFO grant order is never
+    jumped: a younger prefill cannot advance while an older one is
+    deferred. Progress guarantee: when nothing is decoding, at least one
+    backlog row always chunks (a budget below ``decode_tokens +
+    chunk_tokens`` must throttle, not deadlock).
+    """
+    if chunk_tokens < 1:
+        raise ValueError("chunk_tokens must be >= 1")
+    decode_tokens = len(decode_rows) * max(decode_chunk, 1)
+    backlog = list(prefill_backlog)
+    if not backlog:
+        return RoundPlan(decode_tokens, [], 0)
+    n = max(0, int(budget) - decode_tokens) // chunk_tokens
+    if n == 0 and not decode_rows:
+        n = 1
+    n = min(n, len(backlog))
+    return RoundPlan(decode_tokens, backlog[:n], len(backlog) - n)
+
+
+@dataclasses.dataclass
 class Request:
     rid: int
     prompt_len: int
@@ -149,7 +193,10 @@ class ContinuousBatcher:
                  decode_fn: Callable[[List[int]], List[bool]]):
         self.capacity = capacity
         self.decode_fn = decode_fn
-        self.queue: List[Request] = []
+        # deque: admission pops the FIFO head O(1) — a list's pop(0)
+        # shifts the whole backlog on every admission (O(n) per pop,
+        # quadratic over a burst)
+        self.queue: Deque[Request] = collections.deque()
         self.active: List[Request] = []
         self.finished: List[Request] = []
         self._steps_left: Dict[int, int] = {}
@@ -161,7 +208,7 @@ class ContinuousBatcher:
         """One scheduler tick. Returns number of active sequences."""
         # admit FIFO while there is capacity (the semaphore discipline)
         while self.queue and len(self.active) < self.capacity:
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             self.active.append(req)
             self._steps_left[req.rid] = req.max_new_tokens
         if not self.active:

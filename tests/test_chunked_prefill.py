@@ -1,0 +1,143 @@
+"""Continuous chunked prefill: bit-identity with one-shot prefill.
+
+DESIGN.md §12's correctness bar: chunking is a *schedule* change only —
+for greedy decoding, the emitted token streams must be bit-identical to
+one-shot whole-prompt prefill for every chunk size, both KV layouts, and
+with prefix sharing on or off. The engine-level tests drive the real
+``SlotServeEngine`` round loop (admission, planner, page growth,
+completion sampling); the model-level test isolates the chunked
+attention math itself.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve.engine import SlotServeEngine
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_arch("qwen3-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_prompts(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def run_engine(model, params, prompts, *, chunk=None, layout="slots",
+               sharing="off", arrivals=None, new_tokens=5, capacity=2,
+               **kw):
+    """Serve every prompt to completion; returns (engine, streams)."""
+    max_len = max(len(p) for p in prompts) + new_tokens + 1
+    eng = SlotServeEngine(model, params, capacity=capacity,
+                          max_len=max_len, decode_chunk=2, seed=0,
+                          kv_layout=layout, page_size=8,
+                          prefix_sharing=sharing,
+                          prefill_chunk_tokens=chunk, **kw)
+    arr = (np.zeros(len(prompts)) if arrivals is None
+           else np.asarray(arrivals))
+    reqs, nxt = [], 0
+    while nxt < len(prompts) or eng.queue or eng.active:
+        while nxt < len(prompts) and arr[nxt] <= eng.step_clock:
+            reqs.append(eng.submit(prompts[nxt], new_tokens))
+            nxt += 1
+        if eng.step() == 0 and not eng.queue and nxt < len(prompts):
+            eng.step_clock += 1  # idle tick toward the next arrival
+    return eng, [list(r.out_tokens) for r in reqs]
+
+
+def test_whole_prompt_chunk_matches_one_shot_prefill(model_and_params):
+    # the model-level identity the engine relies on: prefilling the
+    # entire prompt as ONE chunk against a zero decode cache produces
+    # the same next-token distribution as the one-shot prefill path
+    cfg, model, params = model_and_params
+    lp, max_len = 12, 24
+    prompt = make_prompts(cfg, [lp])[0]
+    logits_os, _ = model.prefill(params, {"tokens": prompt[None, :]},
+                                 max_len=max_len)
+    cache = model.init_cache(1, max_len)
+    pos = np.arange(lp, dtype=np.int32)[None, :]
+    logits_ch, _ = model.prefill_chunk(
+        params, cache, prompt[None, :], pos, pos)
+    last = np.asarray(logits_ch[:, -1, :])
+    ref = np.asarray(logits_os)
+    assert int(np.argmax(last)) == int(np.argmax(ref))
+    np.testing.assert_allclose(last, ref, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("layout", ["slots", "paged"])
+@pytest.mark.parametrize("chunk", [1, 6, 64])
+def test_chunked_streams_match_one_shot(model_and_params, layout, chunk):
+    # chunk sizes straddle the interesting regimes: 1 (every position
+    # its own round), mid-prompt (partial chunks + pad lanes), and
+    # >= prompt (degenerate single-chunk prefill)
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [12, 5, 9, 12])
+    _, base = run_engine(model, params, prompts, layout=layout)
+    eng, got = run_engine(model, params, prompts, chunk=chunk,
+                          layout=layout)
+    assert eng.prefill_chunk == chunk  # gate did not silently disable
+    assert got == base
+
+
+@pytest.mark.parametrize("sharing", ["on", "off"])
+def test_chunked_streams_match_with_prefix_sharing(model_and_params,
+                                                   sharing):
+    # repeated prompts on the paged arena: with sharing on, chunked
+    # admission adopts a live donor's prefix pages (skipping whole
+    # chunks) and must still emit the identical stream
+    cfg, model, params = model_and_params
+    p = make_prompts(cfg, [16])[0]
+    prompts, arrivals = [p, p], [0, 6]
+    _, base = run_engine(model, params, prompts, layout="paged",
+                         sharing=sharing, arrivals=arrivals,
+                         new_tokens=8)
+    eng, got = run_engine(model, params, prompts, chunk=8,
+                          layout="paged", sharing=sharing,
+                          arrivals=arrivals, new_tokens=8)
+    assert got == base
+    assert got[0] == got[1]  # identical prompts, greedy: same stream
+    if sharing == "on":
+        st = eng.stats()
+        assert st["prefix_hits"] >= 1
+        assert st["shared_pages_adopted"] >= 1
+
+
+def test_chunked_counters_account_for_every_prompt_token(
+        model_and_params):
+    cfg, model, params = model_and_params
+    lens, chunk = [12, 5, 9, 12], 6
+    prompts = make_prompts(cfg, lens)
+    eng, _ = run_engine(model, params, prompts, chunk=chunk)
+    st = eng.stats()
+    assert st["prefill_tokens"] == sum(lens)
+    assert st["prefill_chunks"] == sum(-(-n // chunk) for n in lens)
+    # pad lanes: each prompt's last chunk pads to the fixed chunk width
+    assert st["pad_tokens"] == sum(-(-n // chunk) * chunk - n
+                                   for n in lens)
+    padf = st["pad_tokens"] / (st["pad_tokens"] + st["prefill_tokens"])
+    assert st["pad_fraction"] == pytest.approx(padf)
+    # structural property of the interleaved schedule: a decode round
+    # never waits on a whole-prompt prefill dispatch
+    assert st["decode_rounds_stalled_by_prefill"] == 0
+
+
+def test_chunked_prefill_gated_off_for_sampling(model_and_params):
+    # temperature > 0 cannot keep streams comparable across schedules
+    # (the completion token's key order differs), so the engine must
+    # fall back to one-shot prefill rather than change outputs
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [8, 8])
+    eng, got = run_engine(model, params, prompts, chunk=4,
+                          temperature=0.7)
+    assert eng.prefill_chunk == 0
+    assert all(len(s) == 5 for s in got)

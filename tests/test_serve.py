@@ -1,5 +1,6 @@
 """Serving: engine generation, semaphore admission, continuous batching."""
 
+import collections
 import threading
 import time
 
@@ -11,7 +12,7 @@ from repro.configs import get_arch
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import (AdmissionController, ContinuousBatcher,
-                                   Request, plan_admission)
+                                   Request, plan_admission, plan_round)
 
 
 def test_engine_generates():
@@ -62,6 +63,57 @@ def test_admission_controller_gates_concurrency():
         t.join()
     assert gauge["max"] <= 3
     assert ctl.completed == 12
+
+
+def test_plan_round_decode_first_then_fifo_chunks():
+    # budget 10: two decode rows eat 2*2, leftover 6 funds one 4-token
+    # chunk for the FIFO head of the backlog; the rest defer
+    plan = plan_round(10, [0, 1], [5, 6, 7], chunk_tokens=4,
+                      decode_chunk=2)
+    assert plan.decode_tokens == 4
+    assert plan.chunk_rows == [5]
+    assert plan.deferred == 2
+
+
+def test_plan_round_never_displaces_decode_rows():
+    # a budget below the decode demand throttles prefill only: every
+    # in-flight decode still advances, no chunk is granted
+    plan = plan_round(1, [0, 1, 2], [3], chunk_tokens=8, decode_chunk=2)
+    assert plan.decode_tokens == 6
+    assert plan.chunk_rows == []
+    assert plan.deferred == 1
+
+
+def test_plan_round_progress_guarantee_when_idle():
+    # nothing decoding + a starvation budget: one backlog row must still
+    # chunk (throttle, never deadlock)
+    plan = plan_round(0, [], [9, 10], chunk_tokens=16)
+    assert plan.chunk_rows == [9]
+    assert plan.deferred == 1
+
+
+def test_plan_round_grants_fifo_prefix_in_caller_order():
+    # backlog arrives in admission-grant order; grants are its prefix —
+    # a younger prefill never advances while an older one defers
+    plan = plan_round(100, [], [4, 2, 9], chunk_tokens=10)
+    assert plan.chunk_rows == [4, 2, 9]
+    plan = plan_round(25, [], [4, 2, 9], chunk_tokens=10)
+    assert plan.chunk_rows == [4, 2]
+    assert plan.deferred == 1
+
+
+def test_continuous_batcher_queue_is_deque_and_stays_fifo():
+    # regression for the O(n) list.pop(0) admission path: the backlog is
+    # a deque and a large burst still admits (and hence finishes, with
+    # max_new_tokens=1) in strict submission order
+    b = ContinuousBatcher(capacity=3,
+                          decode_fn=lambda rids: [True] * len(rids))
+    assert isinstance(b.queue, collections.deque)
+    for rid in range(200):
+        b.submit(Request(rid=rid, prompt_len=1, max_new_tokens=1))
+    b.drain()
+    done = [r.rid for r in b.finished]
+    assert done == sorted(done) and len(done) == 200
 
 
 def test_continuous_batcher_fifo_and_capacity():
