@@ -40,6 +40,16 @@ a whole padded bucket — must cut the p99 queue wait, at no increase in
 per-round top-up batch) and a strictly lower prefill pad fraction. CI
 asserts all four deltas.
 
+An **open-loop front-end trace** (``BENCH_frontend.json``) drives the
+same engine through the asyncio front-end (serve/frontend.py, DESIGN.md
+§13): concurrent clients arrive Poisson on the wall clock, stream
+tokens as rounds complete, and every ``--cancel-every``-th client hangs
+up mid-generation. The trace reports p50/p99 time-to-first-token,
+goodput under the ``--slo-ms`` TTFT SLO, and the cancellation-safety
+ledger CI gates on: zero leaked pages after the drain (refcount-safe
+with shared prefixes) and survivors' token streams bit-identical to the
+closed-loop driver on the same prompts.
+
   PYTHONPATH=src python benchmarks/servebench.py --smoke
 
 ``--smoke`` runs a reduced sweep and writes ``BENCH_serve.json`` so CI
@@ -49,6 +59,7 @@ records the perf trajectory.
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import time
 
@@ -197,6 +208,144 @@ def bench_slot_engine(model, params, prompts, arrivals, *, capacity,
     return row, streams
 
 
+def bench_open_loop(model, params, prompts, closed_streams, *, capacity,
+                    new_tokens, decode_chunk, seed, page_size,
+                    prefix_sharing, prefill_chunk_tokens, cancel_every,
+                    cancel_after_tokens, arrival_rate, slo_ms,
+                    intake_limit=256):
+    """Open-loop trace through the asyncio front-end: Poisson wall-clock
+    arrivals, token streaming, every ``cancel_every``-th client hanging
+    up after ``cancel_after_tokens`` streamed tokens.
+
+    ``closed_streams`` are the closed-loop driver's per-prompt greedy
+    streams on the identical engine config; survivors must match them
+    bit-for-bit (greedy streams depend only on the prompt, so neither
+    arrival timing nor other clients' cancellations may show through).
+    """
+    from repro.serve.engine import RequestState, SlotServeEngine
+    from repro.serve.frontend import AsyncFrontend, IntakeFullError
+
+    n = len(prompts)
+    prompt_len = max(int(np.asarray(p).size) for p in prompts)
+    max_len = prompt_len + new_tokens + 1
+    engine = SlotServeEngine(model, params, capacity=capacity,
+                             max_len=max_len, decode_chunk=decode_chunk,
+                             seed=seed, kv_layout="paged",
+                             page_size=page_size,
+                             prefix_sharing=prefix_sharing,
+                             prefill_chunk_tokens=prefill_chunk_tokens)
+    # warm the compiled traces so TTFT measures scheduling, not jit
+    warm = max(prompts, key=lambda p: np.asarray(p).size)
+    engine.submit(warm, max_new_tokens=min(2, new_tokens))
+    engine.run_until_done()
+    engine.finished.clear()
+    engine.grant_log.clear()
+    engine.decode_dispatches = 0
+    engine.step_clock = 0
+    engine.cancellations = engine.expiries = 0
+    engine.pool.pages.reset_stats()
+
+    rng = np.random.default_rng(seed + 3)
+    gaps_s = rng.exponential(1.0 / arrival_rate, n)
+    cancels = {i for i in range(n)
+               if cancel_every and i % cancel_every == cancel_every - 1}
+    records = []
+
+    async def client(fe, i, prompt):
+        rec = {"i": i, "tokens": [], "handle": None, "shed": False}
+        records.append(rec)
+        try:
+            h = await fe.submit(prompt, new_tokens)
+        except IntakeFullError:
+            rec["shed"] = True
+            return
+        rec["handle"] = h
+        async for tok in h:
+            rec["tokens"].append(tok)
+
+    # hang up once the client has its tokens-in-hand quota. Driving the
+    # cancel from the between-rounds hook (rather than the consumer
+    # coroutine) makes it deterministic: generations run >= 4 rounds and
+    # the quota is reached by round 1-2, so every cancel lands while its
+    # request is still mid-flight — what the leak gate must exercise.
+    async def hook(fe):
+        for rec in records:
+            h = rec["handle"]
+            if (h is not None and rec["i"] in cancels
+                    and h._streamed >= cancel_after_tokens
+                    and not h._cancel_requested):
+                h.cancel()
+
+    async def drive():
+        async with AsyncFrontend(engine, intake_limit=intake_limit,
+                                 round_hook=hook) as fe:
+            tasks = []
+            for i, prompt in enumerate(prompts):
+                await asyncio.sleep(gaps_s[i])
+                tasks.append(asyncio.ensure_future(client(fe, i, prompt)))
+            await asyncio.gather(*tasks)
+            await fe.drain()
+            return fe
+
+    t0 = time.perf_counter()
+    fe = asyncio.run(drive())
+    wall_s = time.perf_counter() - t0
+
+    # cancellation safety: the drained arena must be exactly full again
+    engine.pool.pages.check()
+    leaked = engine.pool.pages.num_pages - engine.pool.pages.n_free
+
+    # survivors = clients that never asked to cancel (a cancelling
+    # client that lost the race to natural completion stops consuming
+    # its stream, so its local token list is truncated by design)
+    survivors_match = all(
+        rec["tokens"] == closed_streams[rec["i"]]
+        for rec in records
+        if rec["i"] not in cancels
+        and rec["handle"] is not None
+        and rec["handle"].state is RequestState.FINISHED)
+    ttfts = sorted(r["handle"].ttft_s for r in records
+                   if r["handle"] is not None
+                   and r["handle"].ttft_s is not None)
+    slo_s = slo_ms / 1e3
+    good_tokens = sum(
+        len(r["tokens"]) for r in records
+        if r["handle"] is not None
+        and r["handle"].state is RequestState.FINISHED
+        and r["handle"].ttft_s is not None
+        and r["handle"].ttft_s <= slo_s)
+    st = fe.stats()
+    return {
+        "requests": n,
+        "capacity": capacity,
+        "arrival_rate": arrival_rate,
+        "cancel_every": cancel_every,
+        "wall_s": wall_s,
+        "rounds": int(st["frontend_rounds"]),
+        "finished": int(st["finished"]),
+        "cancelled": int(st["cancelled"]),
+        "expired": int(st["expired"]),
+        "shed": int(st["frontend_shed"]),
+        "tokens": int(st["tokens"]),
+        "tok_per_s": st["tokens"] / wall_s,
+        "goodput_tok_per_s": good_tokens / wall_s,
+        "slo_ms": slo_ms,
+        "slo_attainment": (len([t for t in ttfts if t <= slo_s])
+                           / max(len(ttfts), 1)),
+        "ttft_p50_ms": (1e3 * float(np.median(ttfts)) if ttfts
+                        else float("nan")),
+        "ttft_p99_ms": (1e3 * float(np.percentile(ttfts, 99)) if ttfts
+                        else float("nan")),
+        "p99_queued_steps": float(st["p99_queued_steps"]),
+        "p99_prefill_steps": float(st["p99_prefill_steps"]),
+        "p99_decode_steps": float(st["p99_decode_steps"]),
+        "prefix_hits": int(st["prefix_hits"]),
+        "leaked_pages": int(leaked),
+        "survivor_streams_match_closed_loop": bool(survivors_match),
+        "fifo_ok": bool(engine.grant_log == sorted(engine.grant_log)),
+    }
+
+
 def bench_legacy(model, params, prompts, *, new_tokens):
     from repro.serve.engine import ServeEngine
     n, prompt_len = prompts.shape
@@ -264,8 +413,27 @@ def main(argv=None):
                     help="long-prompt length for the interleaved trace "
                          "(default 5 pages; shorts are one page)")
     ap.add_argument("--load", type=float, default=0.8)
+    ap.add_argument("--open-loop", default="on", choices=("on", "off"),
+                    help="run the open-loop front-end trace (Poisson "
+                         "wall-clock arrivals + mid-flight "
+                         "cancellations through serve/frontend.py)")
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="open-loop trace: mean wall-clock arrival "
+                         "rate, requests/s")
+    ap.add_argument("--cancel-every", type=int, default=3,
+                    help="open-loop trace: every Nth client cancels "
+                         "mid-generation (0 = nobody cancels)")
+    ap.add_argument("--cancel-after-tokens", type=int, default=2,
+                    help="open-loop trace: tokens a cancelling client "
+                         "consumes before hanging up")
+    ap.add_argument("--slo-ms", type=float, default=30000.0,
+                    help="open-loop trace: TTFT SLO for the goodput "
+                         "split (generous by default — CPU smoke "
+                         "rounds are slow; tighten on hardware)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--frontend-out", default="BENCH_frontend.json",
+                    help="where the open-loop trace's report lands")
     args = ap.parse_args(argv)
 
     from repro.configs import get_arch
@@ -526,6 +694,61 @@ def main(argv=None):
                   f"prefill_chunks={r['prefill_chunks']},"
                   f"stalled_rounds="
                   f"{r['decode_rounds_stalled_by_prefill']}{extra}")
+
+    # ---- open-loop front-end trace (asyncio lifecycle, cancellations)
+    # Shared-prefix prompts at capacity, arriving Poisson on the wall
+    # clock through the asyncio front-end; every Nth client hangs up
+    # mid-stream. The closed-loop driver on the identical engine config
+    # supplies the reference streams: survivors must match bit-for-bit,
+    # and the drained arena must hold zero leaked pages even though
+    # cancelled requests shared refcounted prefix pages with survivors.
+    if args.open_loop == "on" and "paged" in layouts:
+        k = max(args.capacities)
+        ol_groups = max(1, min(args.prefix_groups, k // 2,
+                               args.requests))
+        ol_prompts = shared_prefix_prompts(
+            args.requests, args.prompt_len, ol_groups, cfg.vocab_size,
+            np.random.default_rng(args.seed + 4))
+        ol_chunk = args.page_size
+        # enough decode rounds (>= 4) that a client consuming tokens as
+        # they stream can cancel while its request is still in flight —
+        # a 2-round generation finishes before any cancel can land
+        ol_new = max(4 * args.decode_chunk, args.new_tokens)
+        closed, closed_streams = bench_slot_engine(
+            model, params, ol_prompts, np.zeros(args.requests),
+            capacity=k, new_tokens=ol_new,
+            decode_chunk=args.decode_chunk, seed=args.seed,
+            kv_layout="paged", page_size=args.page_size,
+            prefix_sharing="on", prefill_chunk_tokens=ol_chunk)
+        # streams are keyed by rid in submission order (the warm-up
+        # request holds the lowest rid and was cleared from finished)
+        ordered = [closed_streams[r] for r in sorted(closed_streams)]
+        fe_row = bench_open_loop(
+            model, params, list(ol_prompts), ordered, capacity=k,
+            new_tokens=ol_new, decode_chunk=args.decode_chunk,
+            seed=args.seed, page_size=args.page_size,
+            prefix_sharing="on", prefill_chunk_tokens=ol_chunk,
+            cancel_every=args.cancel_every,
+            cancel_after_tokens=args.cancel_after_tokens,
+            arrival_rate=args.arrival_rate, slo_ms=args.slo_ms)
+        fe_row["closed_loop_tok_per_s"] = closed["tok_per_s"]
+        rows["frontend"] = fe_row
+        print(f"frontend_open_loop_K{k},"
+              f"tok_per_s={fe_row['tok_per_s']:.1f},"
+              f"goodput_tok_per_s={fe_row['goodput_tok_per_s']:.1f},"
+              f"ttft_p50_ms={fe_row['ttft_p50_ms']:.0f},"
+              f"ttft_p99_ms={fe_row['ttft_p99_ms']:.0f},"
+              f"slo_attainment={fe_row['slo_attainment']:.2f},"
+              f"cancelled={fe_row['cancelled']},"
+              f"shed={fe_row['shed']},"
+              f"leaked_pages={fe_row['leaked_pages']},"
+              f"survivors_match="
+              f"{fe_row['survivor_streams_match_closed_loop']},"
+              f"fifo_ok={fe_row['fifo_ok']}")
+        if args.frontend_out:
+            with open(args.frontend_out, "w") as f:
+                json.dump(fe_row, f, indent=2)
+            print(f"# wrote {args.frontend_out}")
 
     if args.out:
         with open(args.out, "w") as f:

@@ -26,11 +26,27 @@ kernel / TPU hardware / pure-jnp ref) and ``--admission-sem`` the live
 gate's algorithm (the paper's sleeping FA semaphore vs the spin
 baselines) — both flow into the engine through one injected
 ``SyncLibrary``.
+
+``--open-loop`` swaps the closed-loop batch drive for production-shaped
+traffic through the asyncio front-end (serve/frontend.py, DESIGN.md
+§13): concurrent clients arrive as a Poisson process at
+``--arrival-rate`` req/s, stream tokens as rounds complete, a
+``--cancel-rate`` fraction hangs up mid-generation, ``--slo-ms`` sets
+the time-to-first-token SLO that splits goodput from throughput, and
+``--deadline-ms`` (optional) arms hard per-request deadlines the
+scheduler enforces (queued-expire + late-row deprioritization).
+``--intake-limit`` bounds the ungranted population; past it, submits
+are shed explicitly.
+
+  python -m repro.launch.serve --arch qwen3-14b --smoke --open-loop \
+      --requests 32 --capacity 4 --arrival-rate 50 --cancel-rate 0.25 \
+      --slo-ms 500 --kv-layout paged --prefix-sharing on
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -40,7 +56,8 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.abstraction import PrimitiveKind
 from repro.models import build_model
-from repro.serve.engine import ServeEngine, SlotServeEngine
+from repro.serve.engine import RequestState, ServeEngine, SlotServeEngine
+from repro.serve.frontend import AsyncFrontend, IntakeFullError
 from repro.serve.scheduler import plan_admission
 from repro.sync import SyncLibrary
 
@@ -64,21 +81,27 @@ def make_sync_library(args) -> SyncLibrary:
                         else args.admission_sem))
 
 
-def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
-                    sync=None):
-    """Serve all requests through the slot engine. ``arrivals_steps``
-    staggers submissions on the decode-step clock (None = burst at 0)."""
-    n = len(prompts)
+def make_engine(model, params, args, sync=None) -> SlotServeEngine:
+    """One engine from the CLI knobs — shared by every driver mode."""
     max_len = args.prompt_len + args.new_tokens + 1
-    engine = SlotServeEngine(
+    return SlotServeEngine(
         model, params, capacity=args.capacity, max_len=max_len,
         decode_chunk=args.decode_chunk, seed=args.seed,
         kv_layout=args.kv_layout, page_size=args.page_size,
+        num_pages=args.num_pages,
         page_growth=args.page_growth, allocator_wait=args.allocator_wait,
         prefix_sharing=args.prefix_sharing,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
         round_token_budget=args.round_token_budget,
         sync=sync if sync is not None else make_sync_library(args))
+
+
+def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
+                    sync=None):
+    """Serve all requests through the slot engine. ``arrivals_steps``
+    staggers submissions on the decode-step clock (None = burst at 0)."""
+    n = len(prompts)
+    engine = make_engine(model, params, args, sync)
     arrivals = (np.zeros(n) if arrivals_steps is None
                 else np.asarray(arrivals_steps))
     t0 = time.perf_counter()
@@ -92,6 +115,92 @@ def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
             engine.step_clock += 1
     dt = time.perf_counter() - t0
     return engine, dt
+
+
+def run_open_loop(model, params, prompts, args, sync=None):
+    """Open-loop traffic through the asyncio front-end: Poisson
+    arrivals, token streaming, mid-flight cancellations, TTFT SLO.
+
+    Returns ``(engine, wall_s, report)`` where ``report`` carries the
+    open-loop ledger: per-request TTFT, goodput-under-SLO, shed and
+    cancelled counts, and the post-drain page-leak check."""
+    engine = make_engine(model, params, args, sync)
+    rng = np.random.default_rng(args.seed)
+    gaps_s = rng.exponential(1.0 / max(args.arrival_rate, 1e-9),
+                             len(prompts))
+    # which clients hang up, and after how many streamed tokens
+    cancel_after = [
+        (1 + int(rng.integers(0, max(args.new_tokens // 2, 1))))
+        if rng.random() < args.cancel_rate else None
+        for _ in prompts]
+    deadline_s = (args.deadline_ms / 1e3
+                  if args.deadline_ms is not None else None)
+    results = []
+
+    async def client(fe, i, prompt):
+        rec = {"i": i, "tokens": [], "shed": False, "handle": None}
+        results.append(rec)
+        try:
+            h = await fe.submit(prompt, args.new_tokens,
+                                deadline_s=deadline_s)
+        except IntakeFullError:
+            rec["shed"] = True
+            return
+        rec["handle"] = h
+        async for tok in h:
+            rec["tokens"].append(tok)
+            if (cancel_after[i] is not None
+                    and len(rec["tokens"]) >= cancel_after[i]):
+                h.cancel()
+
+    async def drive():
+        async with AsyncFrontend(engine,
+                                 intake_limit=args.intake_limit) as fe:
+            tasks = []
+            for i, prompt in enumerate(prompts):
+                await asyncio.sleep(gaps_s[i])
+                tasks.append(asyncio.ensure_future(client(fe, i, prompt)))
+            await asyncio.gather(*tasks)
+            await fe.drain()
+            return fe.stats()
+
+    t0 = time.perf_counter()
+    fe_stats = asyncio.run(drive())
+    wall_s = time.perf_counter() - t0
+
+    ttfts = sorted(r["handle"].ttft_s for r in results
+                   if r["handle"] is not None
+                   and r["handle"].ttft_s is not None)
+    slo_s = args.slo_ms / 1e3
+    good_tokens = sum(
+        len(r["tokens"]) for r in results
+        if r["handle"] is not None
+        and r["handle"].state is RequestState.FINISHED
+        and r["handle"].ttft_s is not None
+        and r["handle"].ttft_s <= slo_s)
+    leaked = 0
+    if args.kv_layout == "paged":
+        engine.pool.pages.check()      # raises PageLeakError on leak
+        leaked = engine.pool.pages.num_pages - engine.pool.pages.n_free
+    report = {
+        "wall_s": wall_s,
+        "ttft_p50_ms": (1e3 * float(np.median(ttfts)) if ttfts
+                        else float("nan")),
+        "ttft_p99_ms": (1e3 * float(np.percentile(ttfts, 99)) if ttfts
+                        else float("nan")),
+        "slo_ms": args.slo_ms,
+        "slo_attainment": (len([t for t in ttfts if t <= slo_s])
+                           / max(len(ttfts), 1)),
+        "goodput_tok_per_s": good_tokens / wall_s,
+        "tok_per_s": fe_stats["tokens"] / wall_s,
+        "shed": int(fe_stats["frontend_shed"]),
+        "cancelled": int(fe_stats["cancelled"]),
+        "expired": int(fe_stats["expired"]),
+        "finished": int(fe_stats["finished"]),
+        "rounds": int(fe_stats["frontend_rounds"]),
+        "leaked_pages": int(leaked),
+    }
+    return engine, wall_s, report
 
 
 def run_legacy_loop(model, params, prompts, args):
@@ -125,6 +234,10 @@ def main(argv=None):
                          "per-slot contexts may exceed max_len)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-arena size (paged layout; default: "
+                         "capacity * ceil(max_len / page_size), the "
+                         "contiguous arena's byte budget)")
     ap.add_argument("--page-growth", default="lazy",
                     choices=("lazy", "eager"),
                     help="paged layout: grant pages lazily per decode "
@@ -153,7 +266,35 @@ def main(argv=None):
     ap.add_argument("--round-token-budget", type=int, default=None,
                     help="per-round token budget the scheduler fills "
                          "with decode rows first, then prefill chunks "
-                         "(default: capacity*decode_chunk + chunk)")
+                         "(default: capacity * (decode_chunk + chunk) — "
+                         "every slot funded; smaller budgets throttle "
+                         "prefill FIFO-fairly, never decode)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="drive production-shaped traffic through the "
+                         "asyncio front-end instead of the closed-loop "
+                         "batch drive: Poisson arrivals, token "
+                         "streaming, mid-flight cancellation, TTFT SLO "
+                         "(serve/frontend.py, DESIGN.md §13)")
+    ap.add_argument("--arrival-rate", type=float, default=16.0,
+                    help="open loop: mean client arrival rate, "
+                         "requests/s (exponential inter-arrival gaps)")
+    ap.add_argument("--cancel-rate", type=float, default=0.0,
+                    help="open loop: fraction of clients that cancel "
+                         "mid-generation after a random number of "
+                         "streamed tokens")
+    ap.add_argument("--slo-ms", type=float, default=1000.0,
+                    help="open loop: time-to-first-token SLO; goodput "
+                         "counts only finished requests that met it")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="open loop: hard per-request deadline armed in "
+                         "the engine — queued requests past it are shed "
+                         "as EXPIRED, active ones are deprioritized for "
+                         "prefill chunks and evicted first under page "
+                         "pressure (default: no deadlines)")
+    ap.add_argument("--intake-limit", type=int, default=256,
+                    help="open loop: bound on the ungranted population "
+                         "(front-end intake + engine FIFO queue); "
+                         "submits past it are shed explicitly")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="also run the old per-request loop")
@@ -189,7 +330,13 @@ def main(argv=None):
           f"p99 {plan.p99_wait:.1f} makespan {plan.makespan:.1f} "
           f"queued {int(plan.waited.sum())}/{args.requests}")
 
-    engine, dt = run_slot_engine(model, params, prompts, args, sync=sync)
+    report = None
+    if args.open_loop:
+        engine, dt, report = run_open_loop(model, params, prompts, args,
+                                           sync=sync)
+    else:
+        engine, dt = run_slot_engine(model, params, prompts, args,
+                                     sync=sync)
     st = engine.stats()
     print(f"[serve] {args.kv_layout} engine: {int(st['finished'])} requests, "
           f"{int(st['tokens'])} tokens in {dt:.2f}s "
@@ -239,6 +386,25 @@ def main(argv=None):
     print(f"[serve] FIFO grant order: {'OK' if fifo_ok else 'VIOLATED'} "
           f"({len(engine.grant_log)} grants, semaphore in-flight "
           f"{engine.admission.in_flight})")
+    if report is not None:
+        print(f"[serve] open loop: {report['finished']} finished / "
+              f"{report['cancelled']} cancelled / "
+              f"{report['expired']} expired / {report['shed']} shed "
+              f"over {report['rounds']} rounds in {report['wall_s']:.2f}s")
+        print(f"[serve] open loop: TTFT p50 {report['ttft_p50_ms']:.0f}ms "
+              f"p99 {report['ttft_p99_ms']:.0f}ms, SLO {args.slo_ms:.0f}ms "
+              f"met by {report['slo_attainment']:.0%}, goodput "
+              f"{report['goodput_tok_per_s']:,.0f} tok/s of "
+              f"{report['tok_per_s']:,.0f} total; "
+              f"time-in-state p99 (steps): queued "
+              f"{st['p99_queued_steps']:.0f} / prefill "
+              f"{st['p99_prefill_steps']:.0f} / decode "
+              f"{st['p99_decode_steps']:.0f}")
+        if args.kv_layout == "paged":
+            print(f"[serve] open loop: leaked pages after drain: "
+                  f"{report['leaked_pages']} (free-list "
+                  f"{engine.pool.pages.n_free}/"
+                  f"{engine.pool.pages.num_pages})")
 
     if args.legacy:
         tokens, dt_old, waits = run_legacy_loop(model, params, prompts, args)

@@ -3,9 +3,15 @@
 # discipline on the hot serving loop).
 from repro.serve.engine import (  # noqa: F401
     GenerationResult,
+    RequestState,
     ServeEngine,
     ServeRequest,
     SlotServeEngine,
+)
+from repro.serve.frontend import (  # noqa: F401
+    AsyncFrontend,
+    IntakeFullError,
+    StreamHandle,
 )
 from repro.serve.kv_pages import (  # noqa: F401
     PagedSlotPool,

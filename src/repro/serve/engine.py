@@ -40,9 +40,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import math
 import time
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +64,36 @@ PyTree = Any
 #: (``mode="drop"``); a negative position would be *wrapped* into a
 #: valid cell by JAX's index semantics, silently corrupting live KV.
 _DROP_POS = 2 ** 30
+
+
+class RequestState(str, enum.Enum):
+    """Lifecycle of a request through the serving stack (DESIGN.md §13).
+
+    ``QUEUED → PREFILLING → DECODING → FINISHED`` is the happy path;
+    ``CANCELLED`` (client tore the stream down) and ``EXPIRED`` (the
+    request's deadline passed while it could still be shed: in the
+    queue, or as a page-pressure eviction victim once late) are the
+    other terminal states. A lazy-growth preemption moves a request
+    *back* to QUEUED — restart, not termination — unless it is already
+    past its deadline, in which case eviction expires it instead of
+    burning pages regenerating a stream that can no longer meet its
+    SLO.
+    """
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    EXPIRED = "expired"
+
+    @property
+    def terminal(self) -> bool:
+        return self in _TERMINAL_STATES
+
+
+_TERMINAL_STATES = frozenset({RequestState.FINISHED,
+                              RequestState.CANCELLED,
+                              RequestState.EXPIRED})
 
 
 @dataclasses.dataclass
@@ -134,6 +165,21 @@ class ServeRequest:
     finish_s: float = 0.0
     slot: int = -1
     eos: bool = False
+    #: lifecycle state (DESIGN.md §13) — engine-owned; the async
+    #: front-end only reads it
+    state: RequestState = RequestState.QUEUED
+    #: step-clock deadline (absolute): past it, a queued request is
+    #: shed as EXPIRED and an active one becomes *late* — deprioritized
+    #: for prefill-chunk grants and first in line for page-pressure
+    #: eviction (which expires rather than requeues it). None = no SLO.
+    deadline_step: Optional[int] = None
+    #: wall-clock deadline (absolute ``time.perf_counter()`` seconds);
+    #: same semantics as ``deadline_step``, either alone suffices
+    deadline_s: Optional[float] = None
+    #: step at which the request left PREFILLING for DECODING (the
+    #: prefilling → decoding transition; == grant_step when prefill ran
+    #: inside admission, i.e. one-shot mode)
+    decode_start_step: int = -1
     #: times this request was evicted mid-stream by the lazy-growth
     #: overflow path and restarted from its prompt (greedy decoding makes
     #: the regenerated stream identical). Its original grant keeps the
@@ -151,6 +197,42 @@ class ServeRequest:
     @property
     def wait_s(self) -> float:
         return self.grant_s - self.arrival_s
+
+    # -------------------------------------------- time-in-state ledger
+    # The three durations partition a granted request's lifetime:
+    # queued + prefilling + decoding == finish_step - arrival_step.
+    @property
+    def queued_steps(self) -> int:
+        """Steps spent QUEUED (== wait_steps for granted requests)."""
+        end = self.grant_step if self.grant_step >= 0 else self.finish_step
+        return max(end - self.arrival_step, 0)
+
+    @property
+    def prefill_steps(self) -> int:
+        """Steps spent PREFILLING (0 in one-shot mode, where the whole
+        prompt prefills inside the granting round)."""
+        if self.grant_step < 0 or self.decode_start_step < 0:
+            return 0
+        return max(self.decode_start_step - self.grant_step, 0)
+
+    @property
+    def decode_steps(self) -> int:
+        """Steps spent DECODING before reaching a terminal state."""
+        if self.decode_start_step < 0 or self.finish_step < 0:
+            return 0
+        return max(self.finish_step - self.decode_start_step, 0)
+
+    def past_deadline(self, step_clock: int,
+                      now_s: Optional[float] = None) -> bool:
+        """Whether either deadline has passed (strictly: a request AT
+        its deadline step is still on time)."""
+        if self.deadline_step is not None and step_clock > self.deadline_step:
+            return True
+        if self.deadline_s is not None:
+            if (now_s if now_s is not None
+                    else time.perf_counter()) > self.deadline_s:
+                return True
+        return False
 
 
 class SlotServeEngine:
@@ -367,6 +449,17 @@ class SlotServeEngine:
         #: rides the decode dispatch)
         self.decode_rounds_stalled_by_prefill = 0
 
+        self.cancellations = 0   # requests torn down via cancel()
+        self.expiries = 0        # requests shed/evicted past their deadline
+        #: rids whose cancellation was requested but not yet applied —
+        #: drained at the next round boundary (top of ``step``), where
+        #: the slot retires through the existing evict path and its
+        #: pages ride the round's one retirement ``free_batch``
+        self._cancel_pending: Set[int] = set()
+        #: page-id arrays evicted mid-round-boundary (cancellations)
+        #: awaiting the round's retirement critical section
+        self._deferred_free: List[np.ndarray] = []
+
         self._next_rid = 0
         self._last_tok = np.zeros(capacity, np.int32)
         self._steps_left = np.zeros(capacity, np.int64)
@@ -465,7 +558,15 @@ class SlotServeEngine:
 
     # ------------------------------------------------------------ submission
     def submit(self, prompt, max_new_tokens: int,
-               rid: Optional[int] = None) -> ServeRequest:
+               rid: Optional[int] = None,
+               deadline_step: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> ServeRequest:
+        """Queue a request. ``deadline_step`` / ``deadline_s`` are
+        *absolute* deadlines (step clock / ``time.perf_counter()``):
+        past either, the request is shed from the queue as EXPIRED, and
+        once active it turns *late* — deprioritized for chunk grants
+        and the preferred page-pressure eviction victim (DESIGN.md
+        §13). No deadline means the pre-SLO behavior, unchanged."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new_tokens + 1 > self.pool.virtual_max_len:
             raise ValueError(
@@ -477,9 +578,108 @@ class SlotServeEngine:
         req = ServeRequest(rid=rid, prompt=prompt,
                            max_new_tokens=max_new_tokens,
                            arrival_step=self.step_clock,
-                           arrival_s=time.perf_counter())
+                           arrival_s=time.perf_counter(),
+                           deadline_step=deadline_step,
+                           deadline_s=deadline_s)
         self.queue.append(req)
         return req
+
+    # ---------------------------------------------------------- cancellation
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of ``rid``. Returns True when the
+        request was still live (queued or active) at the call.
+
+        A queued request is torn down immediately — it holds no slot
+        and no pages. An active request is marked and retired at the
+        *next round boundary* (top of the next ``step``): its slot and
+        semaphore grant free before that round's admission runs, and
+        its pages ride the round's existing retirement ``free_batch``
+        critical section — cancellation adds zero allocator acquires.
+        Shared (prefix-adopted) pages need no special casing: the free
+        is a decref, so a page a surviving adopter still reads outlives
+        the cancelled holder (DESIGN.md §13).
+        """
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                req.state = RequestState.CANCELLED
+                req.finish_step = self.step_clock
+                req.finish_s = time.perf_counter()
+                self.finished.append(req)
+                self.cancellations += 1
+                return True
+        for req in self.active.values():
+            if req.rid == rid:
+                self._cancel_pending.add(rid)
+                return True
+        return rid in self._cancel_pending
+
+    def _apply_cancels(self) -> int:
+        """Round-boundary cancellation: retire every marked active slot
+        through the existing evict path, deferring the page frees into
+        the round's retirement batch (``_retire_batch`` drains them in
+        the same critical section as natural retirements)."""
+        if not self._cancel_pending:
+            return 0
+        rids, self._cancel_pending = self._cancel_pending, set()
+        slots = [s for s, r in self.active.items() if r.rid in rids]
+        for slot in slots:
+            req = self.active.pop(slot)
+            req.state = RequestState.CANCELLED
+            req.finish_step = self.step_clock
+            req.finish_s = time.perf_counter()
+            self._steps_left[slot] = 0
+            self._grow_cap[slot] = 0
+            self._pf_pos[slot] = 0
+            self._pf_end[slot] = 0
+            if self.kv_layout == "paged":
+                held = self.pool.evict(slot, free_pages=False)
+                if held is not None and held.size:
+                    self._deferred_free.append(held)
+            else:
+                self.pool.evict(slot)
+            self.admission.release_slot()
+            self.finished.append(req)
+            self.cancellations += 1
+        return len(slots)
+
+    # -------------------------------------------------------------- deadlines
+    def _expire_queued(self) -> int:
+        """Shed queued requests whose deadline already passed — they
+        could not produce a first token in time, so granting them a
+        slot would only burn pages. Runs before admission planning so
+        the Algorithm-5 timeline never plans an expired request."""
+        if not any(r.deadline_step is not None or r.deadline_s is not None
+                   for r in self.queue):
+            return 0
+        now_s = time.perf_counter()
+        keep: Deque[ServeRequest] = collections.deque()
+        n = 0
+        for req in self.queue:
+            if req.past_deadline(self.step_clock, now_s):
+                req.state = RequestState.EXPIRED
+                req.finish_step = self.step_clock
+                req.finish_s = now_s
+                self.finished.append(req)
+                self.expiries += 1
+                n += 1
+            else:
+                keep.append(req)
+        self.queue = keep
+        return n
+
+    def _late(self, slot: int) -> bool:
+        """Whether the active request in ``slot`` is past its deadline
+        (late rows are deprioritized for chunk grants and evicted first
+        under page pressure)."""
+        return self.active[slot].past_deadline(self.step_clock)
+
+    def _flush_deferred_frees(self) -> None:
+        """Return cancellation-deferred pages when the round ends
+        without reaching ``_retire_batch`` (early exits of ``step``)."""
+        if self._deferred_free:
+            self.pool.pages.free_batch(self._deferred_free)
+            self._deferred_free = []
 
     # ------------------------------------------------------------- admission
     def _planned_admit_count(self) -> int:
@@ -654,6 +854,10 @@ class SlotServeEngine:
                 req.grant_step = self.step_clock
                 req.grant_s = time.perf_counter()
                 self.grant_log.append(req.rid)
+            # one-shot mode prefills inside the granting round, so the
+            # PREFILLING state is instantaneous on the step clock
+            req.state = RequestState.DECODING
+            req.decode_start_step = self.step_clock
             req.out_tokens.append(tok0)
             if self.eos_id is not None and tok0 == self.eos_id:
                 req.eos = True
@@ -788,16 +992,21 @@ class SlotServeEngine:
                 req.grant_step = self.step_clock
                 req.grant_s = time.perf_counter()
                 self.grant_log.append(req.rid)
+            req.state = RequestState.PREFILLING
             self.active[slot] = req
         return len(staged)
 
     def _retire_batch(self, pairs: List[Tuple[int, int]]) -> None:
         """Retire ``(slot, step_offset)`` pairs; under the paged layout
         every retirement's pages return in ONE allocator critical
-        section (deferred-free eviction)."""
+        section (deferred-free eviction). Pages deferred by this
+        round's cancellations ride the same critical section — a round
+        with cancellations pays exactly the retirement acquire it
+        would have paid anyway."""
         deferred = []
         for slot, offset in pairs:
             req = self.active.pop(slot)
+            req.state = RequestState.FINISHED
             req.finish_step = self.step_clock + offset
             req.finish_s = time.perf_counter()
             self._steps_left[slot] = 0
@@ -809,6 +1018,9 @@ class SlotServeEngine:
                 self.pool.evict(slot)
             self.admission.release_slot()
             self.finished.append(req)
+        if self._deferred_free:
+            deferred = self._deferred_free + deferred
+            self._deferred_free = []
         if deferred:
             self.pool.pages.free_batch(deferred)
 
@@ -817,12 +1029,16 @@ class SlotServeEngine:
 
     # --------------------------------------------------- lazy page growth
     def _preempt(self, slot: int) -> None:
-        """Lazy-overflow eviction: kick the youngest grant back to the
-        queue front, reclaiming its pages so older slots can grow. The
-        victim restarts from its prompt on re-admission (greedy decoding
-        regenerates the identical stream); its original grant keeps the
-        FIFO log entry and wait stats."""
+        """Lazy-overflow eviction: kick the victim out, reclaiming its
+        pages so older slots can grow. An on-time victim goes back to
+        the queue front and restarts from its prompt on re-admission
+        (greedy decoding regenerates the identical stream; its original
+        grant keeps the FIFO log entry and wait stats). A victim past
+        its deadline *expires* instead — regenerating a stream that can
+        no longer meet its SLO would burn pages the on-time rows need,
+        which is exactly why late rows are picked as victims first."""
         req = self.active.pop(slot)
+        late = req.past_deadline(self.step_clock)
         self.pool.evict(slot)                  # immediate free: rare path
         self.admission.release_slot()
         self._steps_left[slot] = 0
@@ -830,6 +1046,14 @@ class SlotServeEngine:
         self._pf_pos[slot] = 0                 # chunked: restart the prompt
         self._pf_end[slot] = 0                 # cursor from scratch too
         req.slot = -1
+        if late:
+            req.state = RequestState.EXPIRED
+            req.finish_step = self.step_clock
+            req.finish_s = time.perf_counter()
+            self.finished.append(req)
+            self.expiries += 1
+            return
+        req.state = RequestState.QUEUED
         req.eos = False
         req.out_tokens = []
         req.preemptions += 1
@@ -960,8 +1184,11 @@ class SlotServeEngine:
             # a lone slot can always grow (held + need <= max_pages_per_
             # slot <= num_pages) and never needs a split (refcount > 1
             # implies a second live holder), so preemption strictly
-            # shrinks the starved set and the loop terminates
-            victim = max(order, key=lambda s: self.active[s].rid)
+            # shrinks the starved set and the loop terminates. Victim
+            # order is the SLO policy: rows past their deadline first
+            # (evicting one expires it — §13), youngest grant otherwise.
+            victim = max(order,
+                         key=lambda s: (self._late(s), self.active[s].rid))
             self._preempt(victim)
             order.remove(victim)
             chunk_set.discard(victim)
@@ -970,26 +1197,35 @@ class SlotServeEngine:
 
     # ------------------------------------------------------------ decode loop
     def step(self) -> int:
-        """One scheduler round: re-tune the allocator's wait strategy
+        """One scheduler round: apply round-boundary cancellations and
+        queue-deadline expiries, re-tune the allocator's wait strategy
         from measured contention, admit per the kernel plan (one
         batched page grant + prefix-adoption increfs), lazily top up
         active slots and apply any CoW splits (one batched
         grant/decref), then one fixed-shape decode dispatch of
         ``decode_chunk`` tokens, then retire finished rows (one batched
-        decref/free). Returns the number of still-active requests."""
+        decref/free — cancellation-deferred pages ride this same
+        critical section). Returns the number of still-active
+        requests."""
+        self._apply_cancels()
+        self._expire_queued()
         if self.kv_layout == "paged":
             # between rounds, never mid-critical-section (the adaptive
             # mutex contract); a no-op for pinned/auto wait modes
             self.pool.retune()
         self._admit()
         if not self.active:
+            self._flush_deferred_frees()
             return 0
         steps = self.decode_chunk
         chunked = self.prefill_chunk > 0
         planned: List[int] = []
         if chunked:
             # token-budget round plan: decode rows first, then
-            # fixed-size chunks for the FIFO-oldest prefilling slots
+            # fixed-size chunks for the FIFO-oldest prefilling slots —
+            # except rows already past their deadline, which the
+            # planner pushes behind every on-time row (they only chunk
+            # on budget nobody on time could use; DESIGN.md §13)
             backlog = sorted(
                 (s for s in self.active if self._prefilling(s)),
                 key=lambda s: self.active[s].rid)
@@ -998,12 +1234,15 @@ class SlotServeEngine:
             planned = plan_round(
                 self.round_token_budget, decode_rows, backlog,
                 chunk_tokens=self.prefill_chunk,
-                decode_chunk=steps).chunk_rows
+                decode_chunk=steps,
+                deprioritized=[s for s in backlog
+                               if self._late(s)]).chunk_rows
         if self.kv_layout == "paged":
             paused, advancing = self._grow_for_chunk(steps, tuple(planned))
         else:
             paused, advancing = set(), set(planned)
         if not self.active:                    # everything preempted away
+            self._flush_deferred_frees()
             return 0
         chunk_rows = [s for s in planned
                       if s in advancing and s in self.active]
@@ -1100,6 +1339,8 @@ class SlotServeEngine:
                     schedule=self.prefill_chunk)
             self._pf_pos[s] = 0
             self._pf_end[s] = 0
+            req.state = RequestState.DECODING
+            req.decode_start_step = self.step_clock
             if req.eos or self._steps_left[s] <= 0:
                 retire.append((s, 0))
         for slot in list(self.active):
@@ -1135,20 +1376,62 @@ class SlotServeEngine:
 
     # -------------------------------------------------------------- reporting
     def stats(self) -> Dict[str, float]:
-        fin = self.finished
-        waits = np.asarray([r.wait_steps for r in fin], np.float32)
-        waits_s = np.asarray([r.wait_s for r in fin], np.float32)
-        toks = int(sum(len(r.out_tokens) for r in fin))
+        """Aggregate serving counters. All values are floats; in runs
+        without cancellations or deadlines every pre-existing key keeps
+        its historical meaning (``finished`` counts FINISHED terminals,
+        which is then every terminal). ``tokens`` counts every token
+        actually delivered to a caller, including a cancelled request's
+        partial stream. Wait/time-in-state percentiles are over granted
+        terminal requests (an EXPIRED-in-queue request was never
+        granted and has no wait to report)."""
+        term = self.finished
+        fin = [r for r in term if r.state is RequestState.FINISHED]
+        granted = [r for r in term if r.grant_step >= 0]
+        waits = np.asarray([r.wait_steps for r in granted], np.float32)
+        waits_s = np.asarray([r.wait_s for r in granted], np.float32)
+        toks = int(sum(len(r.out_tokens) for r in term))
+        now_s = time.perf_counter()
+
+        def pctl(vals, q):
+            arr = np.asarray(vals, np.float32)
+            return float(np.percentile(arr, q)) if arr.size else 0.0
+
+        pf_steps = [r.prefill_steps for r in granted]
+        dec_steps = [r.decode_steps for r in granted]
+        q_steps = [r.queued_steps for r in granted]
         out = {
             "finished": float(len(fin)),
+            "terminal": float(len(term)),
+            "cancelled": float(self.cancellations),
+            "expired": float(self.expiries),
             "tokens": float(toks),
             "decode_dispatches": float(self.decode_dispatches),
-            "p50_wait_steps": float(np.median(waits)) if len(fin) else 0.0,
+            "p50_wait_steps": float(np.median(waits)) if len(granted)
+            else 0.0,
             "p99_wait_steps": (float(np.percentile(waits, 99))
-                               if len(fin) else 0.0),
-            "p50_wait_s": float(np.median(waits_s)) if len(fin) else 0.0,
+                               if len(granted) else 0.0),
+            "p50_wait_s": (float(np.median(waits_s)) if len(granted)
+                           else 0.0),
             "p99_wait_s": (float(np.percentile(waits_s, 99))
-                           if len(fin) else 0.0),
+                           if len(granted) else 0.0),
+            # time-in-state ledger (steps; queued + prefilling +
+            # decoding partitions each granted request's lifetime)
+            "queue_depth": float(len(self.queue)),
+            "active_rows": float(len(self.active)),
+            "p50_queued_steps": pctl(q_steps, 50),
+            "p99_queued_steps": pctl(q_steps, 99),
+            "p50_prefill_steps": pctl(pf_steps, 50),
+            "p99_prefill_steps": pctl(pf_steps, 99),
+            "p50_decode_steps": pctl(dec_steps, 50),
+            "p99_decode_steps": pctl(dec_steps, 99),
+            # deadline metadata for the in-flight slots (per-slot
+            # detail via ``slot_deadlines()``)
+            "deadline_rows": float(sum(
+                1 for r in self.active.values()
+                if r.deadline_step is not None or r.deadline_s is not None)),
+            "late_rows": float(sum(
+                r.past_deadline(self.step_clock, now_s)
+                for r in self.active.values())),
             "semaphore_admitted": float(self.admission.admitted),
             "semaphore_completed": float(self.admission.completed),
             # chunked-prefill ledger (meaningful in both modes: one-shot
@@ -1201,4 +1484,24 @@ class SlotServeEngine:
                 "shared_pages_adopted": float(self.shared_pages_adopted),
                 "cow_splits": float(self.cow_splits),
             })
+        return out
+
+    def slot_deadlines(self) -> Dict[int, Dict[str, float]]:
+        """Per-slot deadline metadata for the in-flight rows: the
+        request id, its state, the absolute step deadline (-1 = none),
+        steps of slack left on the step clock (negative once late), and
+        whether the row is late right now. The scalar aggregates
+        (``deadline_rows`` / ``late_rows``) live in :meth:`stats`."""
+        now_s = time.perf_counter()
+        out: Dict[int, Dict[str, float]] = {}
+        for slot, req in sorted(self.active.items()):
+            dl = req.deadline_step
+            out[slot] = {
+                "rid": float(req.rid),
+                "state": req.state.value,
+                "deadline_step": float(dl if dl is not None else -1),
+                "slack_steps": (float(dl - self.step_clock)
+                                if dl is not None else float("inf")),
+                "late": bool(req.past_deadline(self.step_clock, now_s)),
+            }
         return out

@@ -141,7 +141,8 @@ class RoundPlan:
 
 def plan_round(budget: int, decode_rows: Sequence[int],
                prefill_backlog: Sequence[int], *, chunk_tokens: int,
-               decode_chunk: int = 1) -> RoundPlan:
+               decode_chunk: int = 1,
+               deprioritized: Sequence[int] = ()) -> RoundPlan:
     """Fill one round's token budget: decode rows first, then fixed-size
     prefill chunks from the partially-prefilled backlog.
 
@@ -156,11 +157,25 @@ def plan_round(budget: int, decode_rows: Sequence[int],
     deferred. Progress guarantee: when nothing is decoding, at least one
     backlog row always chunks (a budget below ``decode_tokens +
     chunk_tokens`` must throttle, not deadlock).
+
+    ``deprioritized`` names backlog rows that are past their request's
+    deadline (DESIGN.md §13): they move behind every on-time row —
+    keeping their relative FIFO order — so a late prompt only consumes
+    chunk budget no on-time prompt could use. This is the one sanctioned
+    exception to the FIFO grant order, and it is scoped to *chunk
+    scheduling among already-admitted rows*: the admission semaphore's
+    FIFO is untouched, and an over-deadline request is never starved
+    outright — when only late rows remain they chunk in FIFO order, and
+    the idle-round progress guarantee applies to them too.
     """
     if chunk_tokens < 1:
         raise ValueError("chunk_tokens must be >= 1")
     decode_tokens = len(decode_rows) * max(decode_chunk, 1)
     backlog = list(prefill_backlog)
+    late = set(deprioritized)
+    if late:
+        backlog = ([r for r in backlog if r not in late]
+                   + [r for r in backlog if r in late])
     if not backlog:
         return RoundPlan(decode_tokens, [], 0)
     n = max(0, int(budget) - decode_tokens) // chunk_tokens

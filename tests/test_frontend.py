@@ -1,0 +1,455 @@
+"""Request lifecycle: cancellation safety, deadlines, and the async
+streaming front-end (DESIGN.md §13).
+
+The correctness bars:
+
+  * **cancellation is leak-free at every lifecycle state** — QUEUED,
+    PREFILLING, DECODING — on both KV layouts and with prefix sharing
+    on or off: the cancelled request's pages (including CoW-shared,
+    refcount-held ones) come back by the next round boundary, the
+    free-list count is fully restored after drain, and ``check()``
+    raises no ``PageLeakError``;
+  * **survivors are oblivious** — greedy token streams of uncancelled
+    requests are bit-identical to a run with no cancellations at all;
+  * **deadlines shed work, never corrupt it** — a queued request past
+    its deadline is EXPIRED before admission, an active-late one is
+    deprioritized and, if evicted, expires instead of restarting;
+  * the asyncio front-end streams tokens across rounds, sheds load at
+    the intake bound, and reports the same engine ledger.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import (
+    AsyncFrontend,
+    IntakeFullError,
+    RequestState,
+    SlotServeEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_arch("qwen3-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_prompts(cfg, lens, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def make_engine(model, prompts, new_tokens, *, layout="paged",
+                sharing="off", capacity=2, chunk=6, **kw):
+    max_len = max(len(p) for p in prompts) + new_tokens + 1
+    params = kw.pop("params")
+    return SlotServeEngine(model, params, capacity=capacity,
+                           max_len=max_len, decode_chunk=2, seed=0,
+                           kv_layout=layout, page_size=8,
+                           prefix_sharing=sharing,
+                           prefill_chunk_tokens=chunk, **kw)
+
+
+def drive(eng, prompts, new_tokens, *, arrivals=None, on_round=None,
+          max_rounds=500):
+    """Serve every prompt to completion, invoking ``on_round(eng,
+    reqs)`` after each step (cancellation injection point). Returns the
+    request objects in submission order."""
+    arr = (np.zeros(len(prompts)) if arrivals is None
+           else np.asarray(arrivals))
+    reqs, nxt, rounds = [], 0, 0
+    while nxt < len(prompts) or eng.queue or eng.active \
+            or eng._cancel_pending:
+        while nxt < len(prompts) and arr[nxt] <= eng.step_clock:
+            reqs.append(eng.submit(prompts[nxt], new_tokens))
+            nxt += 1
+        if eng.step() == 0 and not eng.queue and nxt < len(prompts):
+            eng.step_clock += 1
+        if on_round is not None:
+            on_round(eng, reqs)
+        rounds += 1
+        assert rounds < max_rounds, "engine failed to drain"
+    return reqs
+
+
+def assert_no_leaks(eng):
+    if eng.kv_layout == "paged":
+        eng.pool.pages.check()      # raises PageLeakError on any leak
+        assert eng.pool.pages.n_free == eng.pool.pages.num_pages
+
+
+# ---------------------------------------------------------------------------
+# Cancellation safety: every state x layout x sharing
+# ---------------------------------------------------------------------------
+
+# (layout, sharing): sharing needs pages to share, so "on" is paged-only
+CANCEL_CONFIGS = [("slots", "off"), ("paged", "off"), ("paged", "on")]
+
+
+@pytest.mark.parametrize("layout,sharing", CANCEL_CONFIGS)
+def test_cancel_every_state_survivors_bit_identical(model_and_params,
+                                                    layout, sharing):
+    cfg, model, params = model_and_params
+    # victim prompt 0 repeats prompt 2 so sharing=on actually shares;
+    # chunk=6 < len(prompt) so PREFILLING is a reachable state
+    prompts = make_prompts(cfg, [14, 5, 9])
+    prompts[2] = prompts[0].copy()
+    new_tokens = 5
+
+    def run(target_state):
+        eng = make_engine(model, prompts, new_tokens, layout=layout,
+                          sharing=sharing, params=params)
+        victim_cancelled = []
+
+        if target_state is RequestState.QUEUED:
+            # cancel before the first round ever runs: no slot, no pages
+            reqs = [eng.submit(p, new_tokens) for p in prompts]
+            assert eng.cancel(reqs[0].rid)
+            victim_cancelled.append(True)
+            rounds = 0
+            while eng.queue or eng.active:
+                eng.step()
+                rounds += 1
+                assert rounds < 200
+            return eng, reqs, victim_cancelled
+
+        def on_round(eng_, reqs):
+            if target_state is None or victim_cancelled:
+                return
+            victim = reqs[0] if reqs else None
+            if victim is not None and victim.state is target_state:
+                assert eng_.cancel(victim.rid)
+                victim_cancelled.append(True)
+
+        eng_reqs = drive(eng, prompts, new_tokens, on_round=on_round)
+        return eng, eng_reqs, victim_cancelled
+
+    base_eng, base_reqs, _ = run(None)
+    base_streams = [list(r.out_tokens) for r in base_reqs]
+    assert all(len(s) == new_tokens for s in base_streams)
+    assert_no_leaks(base_eng)
+
+    for state in (RequestState.QUEUED, RequestState.PREFILLING,
+                  RequestState.DECODING):
+        eng, reqs, cancelled = run(state)
+        if not cancelled:
+            # one-shot admission (chunk >= prompt) never parks a row in
+            # PREFILLING; nothing to cancel there — config-dependent
+            assert state is RequestState.PREFILLING
+            continue
+        assert reqs[0].state is RequestState.CANCELLED
+        assert len(reqs[0].out_tokens) < new_tokens
+        assert reqs[0].finish_step >= 0
+        # survivors never notice: bit-identical greedy streams
+        for i in (1, 2):
+            assert reqs[i].state is RequestState.FINISHED
+            assert list(reqs[i].out_tokens) == base_streams[i], (
+                f"survivor {i} diverged after cancel at {state}")
+        assert_no_leaks(eng)
+        st = eng.stats()
+        assert st["cancelled"] == 1
+        assert st["terminal"] == len(prompts)
+        assert st["finished"] == len(prompts) - 1
+
+
+def test_cancel_frees_pages_at_next_round_boundary(model_and_params):
+    # a lone decoding request: after cancel + one step, every page is
+    # back on the free list — not merely "eventually"
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [12])
+    eng = make_engine(model, prompts, 8, layout="paged", params=params)
+    req = eng.submit(prompts[0], 8)
+    eng.step()
+    while req.state is not RequestState.DECODING:
+        eng.step()
+    assert eng.pool.pages.n_free < eng.pool.pages.num_pages
+    assert eng.cancel(req.rid)
+    assert req.state is RequestState.DECODING  # not yet: round boundary
+    before = eng.pool.pages.lock_stats()["acquires"]
+    eng.step()                                 # the next round boundary
+    assert req.state is RequestState.CANCELLED
+    assert_no_leaks(eng)
+    # cancellation frees ride ONE batched critical section (the round's
+    # retirement reclaim) — never a per-page or per-request acquire
+    assert eng.pool.pages.lock_stats()["acquires"] - before <= 1
+
+
+def test_cancel_shared_prefix_donor_keeps_adopter_intact(model_and_params):
+    # adopter holds refcounts on the donor's prefix pages; cancelling
+    # the donor mid-decode must decref, not free, and the adopter's
+    # stream must match its solo run
+    cfg, model, params = model_and_params
+    p = make_prompts(cfg, [16])[0]
+    prompts = [p, p]
+    new_tokens = 6
+
+    # one-shot prefill: adoption happens at the adopter's admission,
+    # so the donor-live overlap below is easy to stage deterministically
+    solo_eng = make_engine(model, [p], new_tokens, layout="paged",
+                           sharing="on", chunk=None, params=params)
+    solo = drive(solo_eng, [p], new_tokens)
+    solo_stream = list(solo[0].out_tokens)
+
+    eng = make_engine(model, prompts, new_tokens, layout="paged",
+                      sharing="on", chunk=None, params=params)
+    done = []
+
+    def on_round(eng_, reqs):
+        if done or len(reqs) < 2:
+            return
+        donor, adopter = reqs[0], reqs[1]
+        # cancel the donor once both are in flight and sharing happened
+        if (donor.state is RequestState.DECODING
+                and not adopter.state.terminal
+                and adopter.grant_step >= 0):
+            eng_.cancel(donor.rid)
+            done.append(True)
+
+    reqs = drive(eng, prompts, new_tokens, arrivals=[0, 2],
+                 on_round=on_round)
+    assert done, "test setup: donor and adopter never overlapped"
+    assert reqs[0].state is RequestState.CANCELLED
+    assert reqs[1].state is RequestState.FINISHED
+    assert list(reqs[1].out_tokens) == solo_stream
+    assert eng.stats()["prefix_hits"] >= 1, "sharing never engaged"
+    assert_no_leaks(eng)
+
+
+def test_cancel_unknown_or_finished_is_refused(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [8])
+    eng = make_engine(model, prompts, 4, params=params)
+    assert not eng.cancel(12345)
+    reqs = drive(eng, prompts, 4)
+    assert reqs[0].state is RequestState.FINISHED
+    assert not eng.cancel(reqs[0].rid)
+    assert eng.stats()["cancelled"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+def test_queued_past_deadline_expires_before_admission(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [10, 10, 10])
+    eng = make_engine(model, prompts, 8, capacity=1, chunk=None,
+                      params=params)
+    blocker = eng.submit(prompts[0], 8)
+    doomed = eng.submit(prompts[1], 8,
+                        deadline_step=eng.step_clock + 1)
+    patient = eng.submit(prompts[2], 8)
+    rounds = 0
+    while eng.queue or eng.active:
+        eng.step()
+        rounds += 1
+        assert rounds < 200
+    assert blocker.state is RequestState.FINISHED
+    assert doomed.state is RequestState.EXPIRED
+    assert doomed.grant_step == -1          # never granted, never paged
+    assert patient.state is RequestState.FINISHED
+    st = eng.stats()
+    assert st["expired"] == 1
+    assert st["finished"] == 2
+    assert_no_leaks(eng)
+    # FIFO grant log never saw the expired rid
+    assert doomed.rid not in eng.grant_log
+
+
+def test_late_eviction_expires_instead_of_requeueing(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [10])
+    eng = make_engine(model, prompts, 8, layout="paged", params=params)
+    req = eng.submit(prompts[0], 8, deadline_step=2)
+    eng.step()
+    while req.state is not RequestState.DECODING:
+        eng.step()
+    eng.step_clock = 10                     # sail past the deadline
+    assert req.past_deadline(eng.step_clock)
+    eng._preempt(req.slot)                  # page-pressure eviction path
+    assert req.state is RequestState.EXPIRED
+    assert req.rid not in [r.rid for r in eng.queue]
+    assert eng.stats()["expired"] == 1
+    assert_no_leaks(eng)
+
+
+# ---------------------------------------------------------------------------
+# Time-in-state ledger
+# ---------------------------------------------------------------------------
+
+def test_time_in_state_partitions_lifetime(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [14, 6, 9, 12])
+    eng = make_engine(model, prompts, 5, params=params)
+    reqs = drive(eng, prompts, 5, arrivals=[0, 0, 2, 5])
+    for r in reqs:
+        assert r.state is RequestState.FINISHED
+        assert (r.queued_steps + r.prefill_steps + r.decode_steps
+                == r.finish_step - r.arrival_step), r.rid
+        assert r.decode_steps > 0
+    st = eng.stats()
+    for k in ("queue_depth", "active_rows", "terminal", "cancelled",
+              "expired", "p50_queued_steps", "p99_queued_steps",
+              "p50_prefill_steps", "p99_prefill_steps",
+              "p50_decode_steps", "p99_decode_steps",
+              "deadline_rows", "late_rows"):
+        assert k in st, k
+    assert st["queue_depth"] == 0.0
+    assert st["active_rows"] == 0.0
+    # chunked admission spends rounds PREFILLING on the long prompts
+    assert st["p99_prefill_steps"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Async front-end
+# ---------------------------------------------------------------------------
+
+def test_frontend_streams_across_rounds_and_matches_engine(
+        model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [12, 5, 9])
+    new_tokens = 6
+
+    base_eng = make_engine(model, prompts, new_tokens, params=params)
+    base = drive(base_eng, prompts, new_tokens)
+    base_streams = [list(r.out_tokens) for r in base]
+
+    eng = make_engine(model, prompts, new_tokens, params=params)
+
+    async def main():
+        async with AsyncFrontend(eng, intake_limit=8) as fe:
+            handles = [await fe.submit(p, new_tokens) for p in prompts]
+            streams = [await h.collect() for h in handles]
+            await fe.drain()
+            return fe, handles, streams
+
+    fe, handles, streams = asyncio.run(main())
+    assert streams == base_streams          # open loop changes nothing
+    assert fe.rounds >= 2                   # tokens arrived over rounds
+    for h in handles:
+        assert h.state is RequestState.FINISHED
+        assert h.ttft_s is not None and h.ttft_s >= 0.0
+        assert h.done
+    assert_no_leaks(eng)
+    st = fe.stats()
+    assert st["frontend_shed"] == 0.0
+    assert st["frontend_rounds"] == float(fe.rounds)
+
+
+def test_frontend_mid_stream_cancel_reclaims_and_spares_survivors(
+        model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [12, 5])
+    eng0 = make_engine(model, prompts, 6, params=params)
+    base = drive(eng0, prompts, 6)
+    base_stream0 = list(base[0].out_tokens)
+
+    eng = make_engine(model, prompts, 6, params=params)
+    state = {}
+
+    async def hook(fe):
+        h = state.get("victim")
+        if h is not None and h._streamed >= 2 \
+                and not h._cancel_requested:
+            h.cancel()
+
+    async def main():
+        async with AsyncFrontend(eng, intake_limit=8,
+                                 round_hook=hook) as fe:
+            survivor = await fe.submit(prompts[0], 6)
+            victim = await fe.submit(prompts[1], 24)
+            state["victim"] = victim
+            got_s = await survivor.collect()
+            got_v = [t async for t in victim]
+            await fe.drain()
+            return got_s, got_v, survivor, victim
+
+    got_s, got_v, survivor, victim = asyncio.run(main())
+    assert survivor.state is RequestState.FINISHED
+    assert got_s == base_stream0
+    assert victim.state is RequestState.CANCELLED
+    assert 2 <= len(got_v) < 24
+    assert victim.out_tokens == got_v       # stream froze at cancel
+    assert_no_leaks(eng)
+    assert eng.stats()["cancelled"] == 1
+
+
+def test_frontend_backpressure_sheds_at_intake_bound(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [8])
+    eng = make_engine(model, prompts, 4, capacity=1, params=params)
+
+    async def main():
+        fe = AsyncFrontend(eng, intake_limit=2)
+        async with fe:
+            first = await fe.submit(prompts[0], 4)
+            shed = 0
+            # burst faster than the loop can transfer: the bound trips
+            try:
+                for _ in range(50):
+                    await fe.submit(prompts[0], 4)
+            except IntakeFullError:
+                shed = 1
+            await fe.drain()
+            return fe, first, shed
+
+    fe, first, shed = asyncio.run(main())
+    assert shed == 1 and fe.shed >= 1
+    assert first.state is RequestState.FINISHED
+    assert_no_leaks(eng)
+    # the admission gate stayed the sole grant authority
+    assert eng.grant_log == sorted(eng.grant_log)
+
+
+def test_frontend_cancel_in_intake_never_reaches_engine(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [8, 8])
+    eng = make_engine(model, prompts, 4, params=params)
+
+    async def main():
+        async with AsyncFrontend(eng, intake_limit=8) as fe:
+            keep = await fe.submit(prompts[0], 4)
+            drop = await fe.submit(prompts[1], 4)
+            drop.cancel()
+            toks = await keep.collect()
+            dropped = [t async for t in drop]
+            await fe.drain()
+            return keep, drop, toks, dropped
+
+    keep, drop, toks, dropped = asyncio.run(main())
+    assert keep.state is RequestState.FINISHED and len(toks) == 4
+    assert drop.state is RequestState.CANCELLED
+    assert dropped == []
+    assert_no_leaks(eng)
+
+
+def test_frontend_deadline_expires_queued_request(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = make_prompts(cfg, [10, 10])
+    eng = make_engine(model, prompts, 8, capacity=1, chunk=None,
+                      params=params)
+
+    async def main():
+        async with AsyncFrontend(eng, intake_limit=8) as fe:
+            blocker = await fe.submit(prompts[0], 8)
+            doomed = await fe.submit(prompts[1], 8, deadline_steps=1)
+            b = await blocker.collect()
+            d = await doomed.collect()
+            await fe.drain()
+            return blocker, doomed, b, d
+
+    blocker, doomed, b, d = asyncio.run(main())
+    assert blocker.state is RequestState.FINISHED and len(b) == 8
+    assert doomed.state is RequestState.EXPIRED and d == []
+    assert eng.stats()["expired"] == 1
+    assert_no_leaks(eng)

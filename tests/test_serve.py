@@ -102,6 +102,41 @@ def test_plan_round_grants_fifo_prefix_in_caller_order():
     assert plan.deferred == 1
 
 
+def test_plan_round_deprioritizes_late_rows_behind_on_time():
+    # late (past-deadline) rows move behind every on-time row, each
+    # group keeping its relative FIFO order (DESIGN.md §13)
+    plan = plan_round(100, [], [4, 2, 9, 7], chunk_tokens=10,
+                      deprioritized=[2, 9])
+    assert plan.chunk_rows == [4, 7, 2, 9]
+    # a tight budget now spends its chunks on the on-time rows only
+    plan = plan_round(25, [], [4, 2, 9, 7], chunk_tokens=10,
+                      deprioritized=[2, 9])
+    assert plan.chunk_rows == [4, 7]
+    assert plan.deferred == 2
+
+
+def test_plan_round_late_rows_still_progress_when_alone():
+    # deprioritization is not starvation: an all-late backlog chunks in
+    # FIFO order and keeps the idle-round progress guarantee
+    plan = plan_round(100, [], [5, 6], chunk_tokens=10,
+                      deprioritized=[5, 6])
+    assert plan.chunk_rows == [5, 6]
+    plan = plan_round(0, [], [5, 6], chunk_tokens=16,
+                      deprioritized=[5, 6])
+    assert plan.chunk_rows == [5]
+    assert plan.deferred == 1
+
+
+def test_plan_round_no_deadlines_is_unchanged():
+    # the deprioritized param defaults to empty: identical plans to the
+    # pre-deadline scheduler for every existing call site
+    a = plan_round(25, [0], [4, 2, 9], chunk_tokens=10, decode_chunk=2)
+    b = plan_round(25, [0], [4, 2, 9], chunk_tokens=10, decode_chunk=2,
+                   deprioritized=())
+    assert (a.decode_tokens, a.chunk_rows, a.deferred) \
+        == (b.decode_tokens, b.chunk_rows, b.deferred)
+
+
 def test_continuous_batcher_queue_is_deque_and_stays_fifo():
     # regression for the O(n) list.pop(0) admission path: the backlog is
     # a deque and a large burst still admits (and hence finishes, with
