@@ -91,6 +91,8 @@ def make_engine(model, params, args, sync=None) -> SlotServeEngine:
         num_pages=args.num_pages,
         page_growth=args.page_growth, allocator_wait=args.allocator_wait,
         prefix_sharing=args.prefix_sharing,
+        prefix_cache=args.prefix_cache,
+        cache_watermark=args.cache_watermark,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
         round_token_budget=args.round_token_budget,
         sync=sync if sync is not None else make_sync_library(args))
@@ -257,6 +259,19 @@ def main(argv=None):
                          "live prefix adopt its pages read-only and "
                          "split on first divergent write (auto = on for "
                          "paged greedy attention serving; DESIGN.md §11)")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=("auto", "on", "off"),
+                    help="page-granular prefix cache on the paged arena: "
+                         "retired requests donate their written full "
+                         "pages to an LRU trie instead of freeing them, "
+                         "so later prompts (and multi-turn follow-ups) "
+                         "re-adopt them without re-prefilling (auto = on "
+                         "for paged greedy chunked-prefill serving; "
+                         "DESIGN.md §14)")
+    ap.add_argument("--cache-watermark", type=float, default=None,
+                    help="free-page fraction below which admission "
+                         "evicts LRU cache entries to fund grants "
+                         "(default: the lazy-growth admit headroom)")
     ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
                     help="continuous chunked prefill: prefill admitted "
                          "prompts this many tokens per scheduler round "
@@ -382,6 +397,18 @@ def main(argv=None):
               f"{int(st['shared_pages_adopted'])} pages adopted, "
               f"{int(st['cow_splits'])} CoW splits, "
               f"{st['pages_per_token']:.3f} pages alloc'd per token")
+        if engine.prefix_cache is not None:
+            print(f"[serve] prefix cache: "
+                  f"{int(st['cache_hits'])} hits "
+                  f"(rate {st['cache_hit_rate']:.2f}), "
+                  f"{int(st['cache_tokens_served'])} tokens served, "
+                  f"{int(st['prefill_tokens_saved'])} prefill tokens "
+                  f"saved; {int(st['cache_pages_held'])} pages held / "
+                  f"{int(st['cache_pages_donated'])} donated / "
+                  f"{int(st['cache_pages_evicted'])} evicted")
+        elif args.prefix_cache != "off":
+            print("[serve] prefix cache requested but disabled "
+                  "(needs paged layout + greedy chunked prefill)")
     fifo_ok = engine.grant_log == sorted(engine.grant_log)
     print(f"[serve] FIFO grant order: {'OK' if fifo_ok else 'VIOLATED'} "
           f"({len(engine.grant_log)} grants, semaphore in-flight "

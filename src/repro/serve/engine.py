@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.kv_pages import PagedSlotPool, PrefixIndex
+from repro.serve.prefix_cache import PrefixCache, cache_key_suffix
 from repro.serve.kv_slots import SlotPool
 from repro.serve.scheduler import (AdmissionController,
                                    allocator_contention, plan_round)
@@ -316,6 +317,8 @@ class SlotServeEngine:
                  page_lookahead_chunks: int = 2,
                  allocator_wait: Optional[str] = None,
                  prefix_sharing: str = "auto",
+                 prefix_cache: str = "off",
+                 cache_watermark: Optional[float] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  round_token_budget: Optional[int] = None,
                  sync: Optional[SyncLibrary] = None):
@@ -402,6 +405,29 @@ class SlotServeEngine:
             prefix_sharing == "on"
             or (prefix_sharing == "auto" and kv_layout == "paged"
                 and temperature <= 0.0 and self._can_pad))
+        # Retained prefix cache (DESIGN.md §14): retirement donates a
+        # request's prefix pages to a page-granular trie instead of
+        # freeing them; admission adopts the longest cached match via
+        # the same incref rider live sharing uses. Gated like sharing:
+        # paged pages to hold, greedy decoding (cache on/off streams
+        # must stay comparable), attention prefill. Off by default —
+        # "auto" turns it on exactly where those conditions hold.
+        if prefix_cache not in ("auto", "on", "off"):
+            raise ValueError(
+                f"unknown prefix_cache {prefix_cache!r}; "
+                f"expected auto, on, or off")
+        if prefix_cache == "on" and kv_layout != "paged":
+            raise ValueError("prefix_cache requires kv_layout='paged' "
+                             "(the contiguous arena has no pages to retain)")
+        self._cache_enabled = (
+            prefix_cache == "on"
+            or (prefix_cache == "auto" and kv_layout == "paged"
+                and temperature <= 0.0 and self._can_pad))
+        # eviction watermark: the free-page floor LRU eviction defends
+        # when grants come up short (defaults to the admission headroom)
+        self.cache_watermark = (float(cache_watermark)
+                                if cache_watermark is not None
+                                else float(admit_headroom))
         self.admit_headroom = float(admit_headroom)
         # top-ups cover this many chunks ahead (capped at the request's
         # admission-time bound) so a long decode pays one grow acquire
@@ -425,6 +451,13 @@ class SlotServeEngine:
         self.prefix_index = (PrefixIndex(self.pool.page_size,
                                          self.pool.pages)
                              if self.prefix_sharing else None)
+        self.prefix_cache = (PrefixCache(self.pool.page_size,
+                                         self.pool.pages)
+                             if self._cache_enabled else None)
+        if self.prefix_cache is not None:
+            # pool.check() audits "every reference has a holder"; the
+            # trie's retained references live outside the block tables
+            self.pool.register_external_holder(self.prefix_cache.holders)
         # deque: admission pops the FIFO head and preemption pushes the
         # victim back in O(1) — a list's pop(0) shifts the whole backlog
         # on every admission (quadratic over a burst)
@@ -438,6 +471,10 @@ class SlotServeEngine:
         self.preemptions = 0     # lazy-overflow evictions (restart victims)
         self.prefix_hits = 0     # admissions that adopted a live prefix
         self.shared_pages_adopted = 0   # pages incref'd instead of alloc'd
+        self.cache_hits = 0      # admissions that adopted a CACHED prefix
+        self.cache_tokens_served = 0    # flat positions served from cache
+        self.prefill_tokens_saved = 0   # chunked-prefill tokens skipped
+        #                                 thanks to cache adoption
         self.cow_splits = 0      # private copies made on divergent writes
         self.prefill_tokens = 0  # real prompt tokens prefilled
         self.pad_tokens = 0      # pad lanes prefill dispatches computed
@@ -476,6 +513,10 @@ class SlotServeEngine:
         # past it), NOT the eager reserve's +1 slack; chunk-tail writes
         # beyond it drop at the sentinel
         self._grow_cap = np.zeros(capacity, np.int64)
+        # generated-boundary registration cursor: full pages of each
+        # DECODING slot's prompt+reply already registered in the live
+        # index (fork/beam adoption of a still-active conversation)
+        self._gen_reg = np.zeros(capacity, np.int64)
         self._key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("pad_to",))
@@ -628,12 +669,18 @@ class SlotServeEngine:
             req.state = RequestState.CANCELLED
             req.finish_step = self.step_clock
             req.finish_s = time.perf_counter()
+            # capture the written extent BEFORE the cursors reset: a
+            # request cancelled mid-(chunked)-prefill still donates its
+            # prefilled full pages to the prefix cache (§13/§14)
+            pf_pos = (int(self._pf_pos[slot])
+                      if self._prefilling(slot) else None)
             self._steps_left[slot] = 0
             self._grow_cap[slot] = 0
             self._pf_pos[slot] = 0
             self._pf_end[slot] = 0
             if self.kv_layout == "paged":
                 held = self.pool.evict(slot, free_pages=False)
+                held = self._donate_on_retire(req, held, prefill_pos=pf_pos)
                 if held is not None and held.size:
                     self._deferred_free.append(held)
             else:
@@ -729,6 +776,70 @@ class SlotServeEngine:
         in-flight top-ups when admitting under lazy growth."""
         return int(np.ceil(self.admit_headroom * self.pool.pages.num_pages))
 
+    def _watermark_pages(self) -> int:
+        """Free-page floor the prefix cache's LRU eviction defends: when
+        a round's grants would leave fewer free pages, LRU leaves are
+        trimmed (their decrefs riding that round's existing critical
+        section) until the floor holds or the cache is empty."""
+        return int(np.ceil(self.cache_watermark * self.pool.pages.num_pages))
+
+    def _lookup_prefix(self, prompt, bucket: int, schedule: int
+                       ) -> Tuple[int, Optional[np.ndarray], bool]:
+        """Longest prefix match across BOTH indexes — the live
+        :class:`PrefixIndex` (pages some active slot still holds) and
+        the retained :class:`PrefixCache` (pages donated by retirees).
+        Returns ``(matched_tokens, page_ids, from_cache)``; the longest
+        match wins, ties to the CACHE. The tie-break matters: a live
+        entry for a retired request's pages stays valid precisely
+        because the cache retains them, so on a tie both name the same
+        physical pages — crediting the cache touches its LRU clock,
+        and a retention policy that never saw these reuse hits would
+        evict exactly the conversations being re-served. A strictly
+        longer live match (e.g. a partial-tail entry past the cache's
+        page granularity) still wins."""
+        sh_len, sh_ids = 0, None
+        if self.prefix_sharing:
+            sh_len, sh_ids = self.prefix_index.lookup(prompt, bucket,
+                                                      schedule=schedule)
+        from_cache = False
+        if self.prefix_cache is not None:
+            c_len, c_ids = self.prefix_cache.lookup(
+                prompt, cache_key_suffix(bucket, schedule))
+            if c_ids is not None and c_len >= sh_len:
+                sh_len, sh_ids, from_cache = c_len, c_ids, True
+        return sh_len, sh_ids, from_cache
+
+    def _plan_evictions(self, deficit: int) -> Tuple[List[np.ndarray], int]:
+        """Ask the cache's LRU for ``deficit`` reclaimable pages.
+        Returns ``(groups, freeable)`` — the caller MUST hand every
+        group to its next allocator critical section as decrefs (the
+        trie has already forgotten them); a caller that ends up not
+        entering one stashes them in ``_deferred_free`` instead."""
+        if (self.prefix_cache is None or deficit <= 0
+                or self.prefix_cache.pages_held <= 0):
+            return [], 0
+        return self.prefix_cache.evict_plan(deficit)
+
+    def _evict_credit(self, evict_groups: List[np.ndarray],
+                      adopt_groups) -> int:
+        """Pages the planned evictions will actually return to the free
+        list: refcount-1 pages NOT re-adopted by the same batch. A
+        live-index (or pre-plan cache) match can name a page the plan
+        also drops — its adoption incref keeps the page allocated, so
+        counting it as free would over-admit and trip the all-or-nothing
+        reserve. Recomputed at every gate: staging one more request can
+        invalidate the credit of an earlier plan."""
+        if not evict_groups:
+            return 0
+        adopt = {int(p) for g in adopt_groups if g is not None
+                 for p in np.asarray(g).reshape(-1)}
+        credit = 0
+        for g in evict_groups:
+            rc = self.pool.pages.refcounts(g)
+            credit += sum(1 for p, r in zip(g.tolist(), rc.tolist())
+                          if r == 1 and int(p) not in adopt)
+        return credit
+
     def _admit(self) -> int:
         """Admit the FIFO front the Algorithm-5 timeline grants now.
 
@@ -755,8 +866,11 @@ class SlotServeEngine:
             return self._admit_chunked()
         had_decoders = bool(self.active)
         n_admit = self._planned_admit_count()
-        staged = []    # (req, slot, lp, bucket, reserve, grant, sh_ids, sh_len)
+        staged = []    # (req, slot, lp, bucket, reserve, grant, sh_ids,
+        #                 sh_len, from_cache)
         staged_pages = 0
+        evict_groups: List[np.ndarray] = []   # cache LRU leaves to drop
+        evict_credit = 0                      # pages those drops free
         lazy = self.kv_layout == "paged" and self.page_growth == "lazy"
         while len(staged) < n_admit and self.queue and self.pool.n_free:
             req = self.queue[0]
@@ -776,21 +890,38 @@ class SlotServeEngine:
                          min(bucket + self.decode_chunk
                              * self.page_lookahead_chunks, need))
                      if lazy else reserve)
-            sh_len, sh_ids = ((self.prefix_index.lookup(req.prompt, bucket)
-                               if self.prefix_sharing else (0, None)))
+            sh_len, sh_ids, from_cache = self._lookup_prefix(
+                req.prompt, bucket, 0)
             n_shared = 0 if sh_ids is None else int(sh_ids.size)
             if self.kv_layout == "paged":
-                fits = (self.pool.can_admit_lazy(
-                            grant, reserve,
-                            headroom_pages=self._headroom_pages(),
-                            pending_pages=staged_pages,
-                            shared_pages=n_shared)
-                        if lazy else
-                        self.pool.can_reserve(
-                            reserve, pending_pages=staged_pages,
-                            shared_pages=n_shared))
-                if not fits:
-                    break
+                def fits(extra: int) -> bool:
+                    return (self.pool.can_admit_lazy(
+                                grant, reserve,
+                                headroom_pages=self._headroom_pages(),
+                                pending_pages=staged_pages,
+                                shared_pages=n_shared, extra_free=extra)
+                            if lazy else
+                            self.pool.can_reserve(
+                                reserve, pending_pages=staged_pages,
+                                shared_pages=n_shared, extra_free=extra))
+
+                def credit() -> int:
+                    return self._evict_credit(
+                        evict_groups,
+                        [t[6] for t in staged] + [sh_ids])
+                evict_credit = credit()
+                if not fits(evict_credit):
+                    # short on pages: ask the cache's LRU to cover the
+                    # worst-case deficit — the drops ride this batch's
+                    # reserve_batch (no extra acquire)
+                    deficit = (
+                        max(self.pool.pages.pages_for(grant) - n_shared, 0)
+                        + staged_pages + self._headroom_pages()
+                        - self.pool.pages.n_free - evict_credit)
+                    groups, _ = self._plan_evictions(deficit)
+                    evict_groups.extend(groups)
+                    if not fits(credit()):
+                        break
             self.queue.popleft()
             # Algorithm-5 wait(): never blocks here because the kernel
             # only granted as many requests as there are free slots —
@@ -800,26 +931,31 @@ class SlotServeEngine:
                 break
             slot = self.pool.acquire(req.rid)
             staged.append((req, slot, lp, bucket, reserve, grant,
-                           sh_ids, sh_len))
+                           sh_ids, sh_len, from_cache))
             if self.kv_layout == "paged":
                 staged_pages += max(
                     self.pool.pages.pages_for(grant) - n_shared, 0)
         if not staged:
+            # planned evictions must still land (the trie already
+            # forgot them): they ride the round's retirement batch
+            self._deferred_free.extend(evict_groups)
             return 0
 
         # one allocator critical section for the whole admission batch
-        # (private grants AND shared-prefix increfs together)
+        # (private grants, shared-prefix increfs, AND cache-eviction
+        # decrefs together)
         if self.kv_layout == "paged":
             grants = self.pool.reserve_batch(
                 [(slot, grant)
-                 for (_, slot, _, _, _, grant, _, _) in staged],
-                shared=[sh_ids for (*_, sh_ids, _) in staged])
+                 for (_, slot, _, _, _, grant, _, _, _) in staged],
+                shared=[sh_ids for (*_, sh_ids, _, _) in staged],
+                evict=evict_groups or None)
         else:
             grants = [None] * len(staged)
 
         instant = []               # eos/0-budget on the prefill token
         for (req, slot, lp, bucket, reserve, grant,
-             sh_ids, sh_len), ids in zip(staged, grants):
+             sh_ids, sh_len, from_cache), ids in zip(staged, grants):
             padded = np.zeros(bucket, np.int32)
             padded[:lp] = req.prompt
             length = (jnp.asarray([lp], jnp.int32)
@@ -834,10 +970,13 @@ class SlotServeEngine:
             if self.kv_layout == "paged":
                 self.pool.insert(slot, cache, lp, reserve=grant, ids=ids,
                                  shared_ids=sh_ids, shared_len=sh_len)
+                if sh_ids is not None and sh_ids.size:
+                    self.prefix_hits += 1
+                    self.shared_pages_adopted += int(sh_ids.size)
+                    if from_cache:
+                        self.cache_hits += 1
+                        self.cache_tokens_served += sh_len
                 if self.prefix_sharing:
-                    if sh_ids is not None and sh_ids.size:
-                        self.prefix_hits += 1
-                        self.shared_pages_adopted += int(sh_ids.size)
                     self.prefix_index.register(
                         req.prompt, bucket,
                         self.pool.page_ids(
@@ -847,6 +986,8 @@ class SlotServeEngine:
             self._last_tok[slot] = tok0
             self._steps_left[slot] = req.max_new_tokens - 1
             self._grow_cap[slot] = max(lp + req.max_new_tokens - 1, lp)
+            if self.kv_layout == "paged":
+                self._gen_reg[slot] = lp // self.pool.page_size
             req.slot = slot
             if req.preemptions == 0 or req.grant_step < 0:
                 # a preempted request was already granted once: its FIFO
@@ -899,8 +1040,10 @@ class SlotServeEngine:
         come from a chunk this engine runs.
         """
         n_admit = self._planned_admit_count()
-        staged = []           # (req, slot, lp, sh_ids, sh_len)
+        staged = []       # (req, slot, lp, grant, sh_ids, sh_len, from_cache)
         staged_pages = 0
+        evict_groups: List[np.ndarray] = []
+        evict_credit = 0
         C = self.prefill_chunk
         lazy = self.kv_layout == "paged" and self.page_growth == "lazy"
         while len(staged) < n_admit and self.queue and self.pool.n_free:
@@ -908,16 +1051,15 @@ class SlotServeEngine:
             lp = int(req.prompt.size)
             need = max(lp + req.max_new_tokens - 1, lp)
             reserve = lp + req.max_new_tokens + 1
-            sh_len, sh_ids = ((self.prefix_index.lookup(
-                                   req.prompt, 0, schedule=C)
-                               if self.prefix_sharing else (0, None)))
+            sh_len, sh_ids, from_cache = self._lookup_prefix(
+                req.prompt, 0, C)
             if sh_ids is not None:
                 ps = self.pool.page_size
                 align = ps * C // math.gcd(ps, C)
                 keep = (min(sh_len, lp - 1) // align) * align
                 n_keep = keep // ps
                 if n_keep <= 0:
-                    sh_len, sh_ids = 0, None
+                    sh_len, sh_ids, from_cache = 0, None, False
                 else:
                     sh_ids, sh_len = sh_ids[:n_keep], keep
             n_shared = 0 if sh_ids is None else int(sh_ids.size)
@@ -927,25 +1069,47 @@ class SlotServeEngine:
                 generous = min(max(lp, first)
                                + self.decode_chunk
                                * self.page_lookahead_chunks, need)
-                grant = None
-                if lazy:
-                    # tiered grant: whole prompt + decode lookahead when
-                    # pages allow (lock parity with one-shot: later
-                    # chunks find their pages pre-granted), else a
-                    # chunk-lookahead window, else just the first chunk
-                    # — the early-admission win when pages are scarce
-                    for g in (generous, window, first):
-                        if self.pool.can_admit_lazy(
-                                g, reserve,
-                                headroom_pages=self._headroom_pages(),
-                                pending_pages=staged_pages,
-                                shared_pages=n_shared):
-                            grant = g
-                            break
-                elif self.pool.can_reserve(reserve,
-                                           pending_pages=staged_pages,
-                                           shared_pages=n_shared):
-                    grant = reserve
+
+                def pick(extra: int) -> Optional[int]:
+                    if lazy:
+                        # tiered grant: whole prompt + decode lookahead
+                        # when pages allow (lock parity with one-shot:
+                        # later chunks find their pages pre-granted),
+                        # else a chunk-lookahead window, else just the
+                        # first chunk — the early-admission win when
+                        # pages are scarce
+                        for g in (generous, window, first):
+                            if self.pool.can_admit_lazy(
+                                    g, reserve,
+                                    headroom_pages=self._headroom_pages(),
+                                    pending_pages=staged_pages,
+                                    shared_pages=n_shared,
+                                    extra_free=extra):
+                                return g
+                    elif self.pool.can_reserve(reserve,
+                                               pending_pages=staged_pages,
+                                               shared_pages=n_shared,
+                                               extra_free=extra):
+                        return reserve
+                    return None
+
+                def credit() -> int:
+                    return self._evict_credit(
+                        evict_groups,
+                        [t[4] for t in staged] + [sh_ids])
+                evict_credit = credit()
+                grant = pick(evict_credit)
+                if grant is None:
+                    # cover the smallest viable tier from the cache's
+                    # LRU — the drops ride this batch's reserve_batch
+                    deficit = (
+                        max(self.pool.pages.pages_for(
+                            first if lazy else reserve) - n_shared, 0)
+                        + staged_pages + self._headroom_pages()
+                        - self.pool.pages.n_free - evict_credit)
+                    groups, _ = self._plan_evictions(deficit)
+                    evict_groups.extend(groups)
+                    grant = pick(credit())
                 if grant is None:
                     break
             else:
@@ -955,31 +1119,45 @@ class SlotServeEngine:
                 self.queue.appendleft(req)
                 break
             slot = self.pool.acquire(req.rid)
-            staged.append((req, slot, lp, grant, sh_ids, sh_len))
+            staged.append((req, slot, lp, grant, sh_ids, sh_len,
+                           from_cache))
             if self.kv_layout == "paged":
                 staged_pages += max(
                     self.pool.pages.pages_for(grant) - n_shared, 0)
         if not staged:
+            self._deferred_free.extend(evict_groups)
             return 0
 
         # the one allocator critical section admission costs — same as
-        # one-shot (private grants and shared-prefix increfs together)
+        # one-shot (private grants, shared-prefix increfs, and cache-
+        # eviction decrefs together)
         if self.kv_layout == "paged":
             grants = self.pool.reserve_batch(
-                [(slot, grant) for (_, slot, _, grant, _, _) in staged],
-                shared=[sh_ids for (*_, sh_ids, _) in staged])
+                [(slot, grant) for (_, slot, _, grant, _, _, _) in staged],
+                shared=[sh_ids for (*_, sh_ids, _, _) in staged],
+                evict=evict_groups or None)
         else:
             grants = [None] * len(staged)
 
-        for (req, slot, lp, grant, sh_ids, sh_len), ids in zip(staged,
-                                                               grants):
+        for (req, slot, lp, grant, sh_ids, sh_len,
+             from_cache), ids in zip(staged, grants):
             if self.kv_layout == "paged":
                 self.pool.assign(slot, ids=ids, shared_ids=sh_ids,
                                  length=sh_len)
-                if (self.prefix_sharing and sh_ids is not None
-                        and sh_ids.size):
+                if sh_ids is not None and sh_ids.size:
                     self.prefix_hits += 1
                     self.shared_pages_adopted += int(sh_ids.size)
+                    # adopted chunks are SKIPPED chunks no matter which
+                    # index served the match: the cursor starts at
+                    # sh_len, so these prompt tokens are never
+                    # dispatched — real compute saved. (A live entry
+                    # for retired pages only stayed valid because the
+                    # cache retained them, so the saving is cache-
+                    # enabled even when attribution goes to the index.)
+                    self.prefill_tokens_saved += sh_len
+                    if from_cache:
+                        self.cache_hits += 1
+                        self.cache_tokens_served += sh_len
             else:
                 self.pool.assign(slot, length=sh_len)
             self._pf_pos[slot] = sh_len        # adoption = skipped chunks
@@ -987,6 +1165,8 @@ class SlotServeEngine:
             self._last_tok[slot] = 0
             self._steps_left[slot] = req.max_new_tokens - 1
             self._grow_cap[slot] = max(lp + req.max_new_tokens - 1, lp)
+            if self.kv_layout == "paged":
+                self._gen_reg[slot] = lp // self.pool.page_size
             req.slot = slot
             if req.preemptions == 0 or req.grant_step < 0:
                 req.grant_step = self.step_clock
@@ -996,13 +1176,60 @@ class SlotServeEngine:
             self.active[slot] = req
         return len(staged)
 
+    def _donate_on_retire(self, req: "ServeRequest", held: np.ndarray,
+                          prefill_pos: Optional[int] = None
+                          ) -> Optional[np.ndarray]:
+        """Offer a retiring request's written prefix to the prefix
+        cache; returns the pages still to be freed (``held`` minus
+        whatever the trie kept — the cache *inherits* the retiree's
+        reference for kept pages, so excluding them from the free group
+        IS the donation: zero extra pool calls, zero extra acquires).
+
+        The donated extent is exactly the positions holding real K/V:
+        the prompt plus every *written* reply token — the final sampled
+        token is never written, and a chunk's post-eos scan lanes write
+        only past the extent (outside any donated full page). A request
+        cancelled mid-(chunked)-prefill donates up to its cursor
+        (``prefill_pos``): the §13 "a cancelled donor still donates"
+        rule.
+        """
+        if self.prefix_cache is None or held is None or not held.size:
+            return held
+        lp = int(req.prompt.size)
+        if prefill_pos is not None:
+            extent = int(prefill_pos)
+            tokens = req.prompt[:extent]
+            gen_from = None
+        else:
+            out = req.out_tokens
+            tokens = np.concatenate(
+                [req.prompt,
+                 np.asarray(out[:-1], np.int32)]) if out else req.prompt
+            extent = int(tokens.size)
+            gen_from = lp if extent > lp else None
+        if extent < self.pool.page_size:
+            return held
+        # donor pages live under the donor's dispatch-shape root: the
+        # §11/§12 shape-identity rule, carried into retention
+        suffix = (cache_key_suffix(0, self.prefill_chunk)
+                  if self.prefill_chunk
+                  else cache_key_suffix(self._bucket_len(lp), 0))
+        kept, _dup = self.prefix_cache.donate(
+            tokens, held, suffix, generated_from=gen_from)
+        if kept.size:
+            held = held[~np.isin(held, kept)]
+        return held
+
     def _retire_batch(self, pairs: List[Tuple[int, int]]) -> None:
         """Retire ``(slot, step_offset)`` pairs; under the paged layout
         every retirement's pages return in ONE allocator critical
         section (deferred-free eviction). Pages deferred by this
         round's cancellations ride the same critical section — a round
         with cancellations pays exactly the retirement acquire it
-        would have paid anyway."""
+        would have paid anyway. With the prefix cache on, each
+        retiree's full prefix pages are *donated* first (refcount
+        inheritance — the kept pages simply stay out of the free
+        group) and only the remainder is freed."""
         deferred = []
         for slot, offset in pairs:
             req = self.active.pop(slot)
@@ -1012,6 +1239,7 @@ class SlotServeEngine:
             self._steps_left[slot] = 0
             if self.kv_layout == "paged":
                 held = self.pool.evict(slot, free_pages=False)
+                held = self._donate_on_retire(req, held)
                 if held is not None and held.size:
                     deferred.append(held)
             else:
@@ -1045,6 +1273,7 @@ class SlotServeEngine:
         self._grow_cap[slot] = 0
         self._pf_pos[slot] = 0                 # chunked: restart the prompt
         self._pf_end[slot] = 0                 # cursor from scratch too
+        self._gen_reg[slot] = 0
         req.slot = -1
         if late:
             req.state = RequestState.EXPIRED
@@ -1160,7 +1389,22 @@ class SlotServeEngine:
                     items.append((s, target))
             splits = (self._split_plan(decode_live, lens, steps)
                       if self.prefix_sharing else [])
-            _, split_ok = self.pool.prepare_batch(items, splits)
+            evict_groups: List[np.ndarray] = []
+            if self.prefix_cache is not None and (items or splits):
+                # watermark eviction rides THIS round's top-up acquire:
+                # when the batch's grants would drag the free list
+                # under the floor, LRU leaves cover the deficit (their
+                # decrefs land before the grants, funding them)
+                needed = sum(
+                    max(self.pool.pages.pages_for(t)
+                        - self.pool.held_pages(s), 0)
+                    for s, t in items) + len(splits)
+                if needed > 0:
+                    deficit = (needed + self._watermark_pages()
+                               - self.pool.pages.n_free)
+                    evict_groups, _ = self._plan_evictions(deficit)
+            _, split_ok = self.pool.prepare_batch(
+                items, splits, evict_groups=evict_groups)
             self.cow_splits += sum(bool(ok) for ok in split_ok)
             # a slot pauses when it cannot cover THIS chunk (a denied
             # lookahead tail is not a reason to stall the row) or when
@@ -1236,7 +1480,13 @@ class SlotServeEngine:
                 chunk_tokens=self.prefill_chunk,
                 decode_chunk=steps,
                 deprioritized=[s for s in backlog
-                               if self._late(s)]).chunk_rows
+                               if self._late(s)],
+                # charge each row its true remainder: a cache-shortened
+                # prefill (cursor started past the adopted prefix) or a
+                # final partial chunk never blocks budget another
+                # backlog row could use
+                remaining={s: int(self._pf_end[s] - self._pf_pos[s])
+                           for s in backlog}).chunk_rows
         if self.kv_layout == "paged":
             paused, advancing = self._grow_for_chunk(steps, tuple(planned))
         else:
@@ -1343,6 +1593,18 @@ class SlotServeEngine:
             req.decode_start_step = self.step_clock
             if req.eos or self._steps_left[s] <= 0:
                 retire.append((s, 0))
+        # live generated-boundary registration (§14): as a decoding
+        # conversation crosses page boundaries, its prompt+reply full
+        # pages enter the live index under the chunked key — a forked
+        # request (same history, new continuation) adopts them while
+        # the donor is still active. Chunked-key only (a fork's prompt
+        # length differs, so one-shot buckets would never match), and
+        # only with the cache on: its token-exactness contract (§14)
+        # covers decode-written pages; plain §11 sharing keeps its
+        # stricter bit-identical-by-construction tier.
+        reg_gen = (self.prefix_cache is not None and self.prefix_sharing
+                   and self.prefill_chunk > 0
+                   and self.kv_layout == "paged")
         for slot in list(self.active):
             if slot in paused or slot in pf_skip:
                 continue
@@ -1362,6 +1624,19 @@ class SlotServeEngine:
                     done_at = s + 1
             if done_at is not None:
                 retire.append((slot, done_at))
+            elif reg_gen:
+                ps = self.pool.page_size
+                extent = int(req.prompt.size) + len(req.out_tokens) - 1
+                n_full = extent // ps
+                if n_full > int(self._gen_reg[slot]):
+                    written = np.concatenate(
+                        [req.prompt,
+                         np.asarray(req.out_tokens[:-1], np.int32)])
+                    self.prefix_index.register(
+                        written[:n_full * ps], 0,
+                        self.pool.page_ids(slot, n_full),
+                        schedule=self.prefill_chunk)
+                    self._gen_reg[slot] = n_full
         self._retire_batch(retire)
         self.step_clock += steps
         return len(self.active)
@@ -1373,6 +1648,18 @@ class SlotServeEngine:
             self.step()
             rounds += 1
         return rounds
+
+    def drop_prefix_cache(self) -> int:
+        """Release every page the prefix cache retains (one
+        ``free_batch``); returns how many references were dropped. The
+        leak-check drain: after this, an idle engine's pool must be
+        empty — benchmarks and the fuzz harness gate exactly that."""
+        if self.prefix_cache is None:
+            return 0
+        groups = self.prefix_cache.drop_all()
+        if groups:
+            self.pool.pages.free_batch(groups)
+        return int(sum(g.size for g in groups))
 
     # -------------------------------------------------------------- reporting
     def stats(self) -> Dict[str, float]:
@@ -1483,7 +1770,22 @@ class SlotServeEngine:
                 "prefix_hits": float(self.prefix_hits),
                 "shared_pages_adopted": float(self.shared_pages_adopted),
                 "cow_splits": float(self.cow_splits),
+                # retained prefix cache (§14): hit/donation/eviction
+                # ledger plus the compute actually saved (chunked-mode
+                # prompt tokens never dispatched because the cursor
+                # started past them on a cache adoption)
+                "prefix_cache": float(self.prefix_cache is not None),
+                "cache_hit_rate": (
+                    float(self.prefix_cache.hits)
+                    / float(max(self.prefix_cache.hits
+                                + self.prefix_cache.misses, 1))
+                    if self.prefix_cache is not None else 0.0),
+                "cache_hits": float(self.cache_hits),
+                "cache_tokens_served": float(self.cache_tokens_served),
+                "prefill_tokens_saved": float(self.prefill_tokens_saved),
             })
+            if self.prefix_cache is not None:
+                out.update(self.prefix_cache.stats())
         return out
 
     def slot_deadlines(self) -> Dict[int, Dict[str, float]]:

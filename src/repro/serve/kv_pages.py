@@ -215,7 +215,8 @@ class PagePool:
     def alloc_batch(self, counts: Sequence[int], tags: Optional[Sequence] = None,
                     *, partial: bool = False,
                     incref_groups: Optional[Sequence] = None,
-                    paired_decrefs: Optional[Sequence] = None
+                    paired_decrefs: Optional[Sequence] = None,
+                    decref_groups: Optional[Sequence] = None
                     ) -> List[Optional[np.ndarray]]:
         """Grant a batch of page requests under ONE critical section.
 
@@ -240,7 +241,13 @@ class PagePool:
             actually allocated). The CoW keeper rule (engine side)
             guarantees a split's source page retains at least one other
             reference, so the page a caller is about to copy from is
-            never recycled by its own decref.
+            never recycled by its own decref;
+          * ``decref_groups`` — unconditional decrefs applied after the
+            increfs but **before the grants**, so pages they free feed
+            the same batch's allocations (the prefix cache's watermark
+            eviction rides the round's existing top-up/admission
+            acquire this way: the LRU leaves it drops fund the grants
+            that demanded them).
 
         Failure is atomic for the whole call: increfs, paired decrefs
         (validated worst-case, as if every request were granted), and
@@ -266,6 +273,8 @@ class PagePool:
                    else np.asarray(g, np.int32).reshape(-1)
                    for g in paired_decrefs]
                   if paired_decrefs is not None else None)
+        dec = [np.asarray(g, np.int32).reshape(-1)
+               for g in (decref_groups or [])]
         out: List[Optional[np.ndarray]] = []
         with self.mutex:
             # validate everything before any count moves: a raise must
@@ -273,13 +282,34 @@ class PagePool:
             # contract the per-call docs promise)
             for g in inc:
                 self._check_incref(g)
-            if paired is not None:
+            if paired is not None or dec:
                 inc_count: Dict[int, int] = {}
                 for g in inc:
                     for i in g.tolist():
                         inc_count[i] = inc_count.get(i, 0) + 1
+                # one shared occurrence map across eviction + paired
+                # decrefs: a page named by both riders must still not
+                # exceed its (post-incref) reference total
                 occ: Dict[int, int] = {}
-                for g in paired:
+                for g in dec:
+                    for i in g.tolist():
+                        if not (0 <= i < self.num_pages):
+                            raise PageLeakError(
+                                f"eviction decref of page {i} outside "
+                                f"the arena [0, {self.num_pages})")
+                        if not self._allocated[i]:
+                            raise PageLeakError(
+                                f"eviction decref of page {i} which is "
+                                f"already free — a double-evict/donate "
+                                f"race escaped the cache protocol")
+                        occ[i] = occ.get(i, 0) + 1
+                        if occ[i] > (int(self._refcount[i])
+                                     + inc_count.get(i, 0)):
+                            raise PageLeakError(
+                                f"page {i} evicted beyond its held "
+                                f"reference(s) — the extra decref would "
+                                f"free a page someone still reads")
+                for g in (paired or []):
                     for i in ([] if g is None else g.tolist()):
                         if not (0 <= i < self.num_pages):
                             raise PageLeakError(
@@ -296,7 +326,14 @@ class PagePool:
                                 f"page {i} appears twice in one free "
                                 f"batch beyond its references — even if "
                                 f"every paired request were granted")
-            if not partial and sum(counts) > len(self._free):
+            # exhaustion credit for the eviction rider: only decrefs
+            # that will actually free a page count — refcount 1 AND not
+            # re-referenced by this same call's increfs (an adoption of
+            # a page the eviction plan also names keeps it allocated)
+            inc_pages = {i for g in inc for i in g.tolist()}
+            if not partial and sum(counts) > len(self._free) + sum(
+                    1 for g in dec for i in g.tolist()
+                    if int(self._refcount[i]) == 1 and i not in inc_pages):
                 raise PagePoolExhausted(
                     f"need {sum(counts)} pages, {len(self._free)} free of "
                     f"{self.num_pages}")
@@ -306,6 +343,10 @@ class PagePool:
             for g in inc:
                 self._refcount[g] += 1
                 self.increfs += int(g.size)
+            # eviction decrefs land before the grants: the pages they
+            # return to the FIFO tail are available to this very batch
+            if dec:
+                self._decref_groups(dec, count_frees=True)
             starved = False
             granted_decrefs = []
             for i, (n, tag) in enumerate(zip(counts, tags)):
@@ -712,6 +753,7 @@ class PagedSlotPool:
                                num_pages, np.int32)
         self._free: List[int] = list(range(capacity))
         self._rid: List[Optional[int]] = [None] * capacity
+        self._external_holders: List[Any] = []
         self._insert_jit = jax.jit(self._insert_impl,
                                    static_argnames=("skip",))
 
@@ -772,7 +814,7 @@ class PagedSlotPool:
 
     # ------------------------------------------------------------- admission
     def can_reserve(self, tokens: int, pending_pages: int = 0,
-                    shared_pages: int = 0) -> bool:
+                    shared_pages: int = 0, extra_free: int = 0) -> bool:
         """Whether an insert reserving ``tokens`` flat positions can be
         satisfied right now (admission gates on this *before* taking the
         slot semaphore, so head-of-line blocking stays FIFO).
@@ -780,17 +822,20 @@ class PagedSlotPool:
         admission batch but not yet allocated; ``shared_pages`` are
         prefix-adopted pages the request will incref instead of
         allocate — they count toward the per-slot table bound but cost
-        nothing from the free list."""
+        nothing from the free list. ``extra_free`` credits pages a
+        planned cache eviction will return inside the same upcoming
+        critical section (they are not on the free list *yet*)."""
         n = self.pages.pages_for(tokens)
         need_now = max(n - max(int(shared_pages), 0), 0)
         return (n <= self.max_pages_per_slot
                 and need_now + max(int(pending_pages), 0)
-                <= self.pages.n_free)
+                <= self.pages.n_free + max(int(extra_free), 0))
 
     def can_admit_lazy(self, initial_tokens: int, total_tokens: int,
                        headroom_pages: int = 0,
                        pending_pages: int = 0,
-                       shared_pages: int = 0) -> bool:
+                       shared_pages: int = 0,
+                       extra_free: int = 0) -> bool:
         """Lazy-growth admission gate: only the *initial* grant (the
         prefill bucket) must fit now, plus a configurable headroom so
         admissions do not starve in-flight slots' top-ups; the
@@ -808,9 +853,10 @@ class PagedSlotPool:
         need_now = (max(self.pages.pages_for(initial_tokens)
                         - max(int(shared_pages), 0), 0)
                     + max(int(pending_pages), 0))
+        avail = self.pages.n_free + max(int(extra_free), 0)
         if self.n_active == 0 and pending_pages == 0:
-            return need_now <= self.pages.n_free
-        return need_now + max(int(headroom_pages), 0) <= self.pages.n_free
+            return need_now <= avail
+        return need_now + max(int(headroom_pages), 0) <= avail
 
     def held_pages(self, slot: int) -> int:
         """Pages currently mapped by ``slot``'s block table."""
@@ -878,7 +924,8 @@ class PagedSlotPool:
                 if int(r) > 1]
 
     def prepare_batch(self, grow_items: Sequence[Tuple[int, int]],
-                      split_items: Sequence[Tuple[int, int]]
+                      split_items: Sequence[Tuple[int, int]],
+                      evict_groups: Sequence = ()
                       ) -> Tuple[List[bool], List[bool]]:
         """One critical section for a scheduler round's page prep: lazy
         top-ups plus copy-on-write splits.
@@ -898,6 +945,10 @@ class PagedSlotPool:
         then splits; a starved split means that slot must pause —
         writing the shared page is never an option.
 
+        ``evict_groups`` (page-id groups) are prefix-cache LRU leaves
+        dropped under the same acquire, *before* the grants — the §10
+        ledger's "eviction rides the top-up section" row.
+
         Returns ``(grow_ok, split_ok)`` aligned with the inputs.
         """
         plan = []                     # (idx, slot, held, extra)
@@ -916,6 +967,10 @@ class PagedSlotPool:
                 plan.append((idx, slot, held, need - held))
         split_old = [int(self._tables[slot, j]) for slot, j in split_items]
         if not plan and not split_items:
+            if evict_groups:
+                # nothing to grant but planned evictions MUST land (the
+                # cache already forgot these pages) — still one acquire
+                self.pages.free_batch(evict_groups)
             return grow_ok, []
         counts = ([extra for (_, _, _, extra) in plan]
                   + [1] * len(split_items))
@@ -924,7 +979,8 @@ class PagedSlotPool:
         paired = ([None] * len(plan)
                   + [[old] for old in split_old])
         grants = self.pages.alloc_batch(counts, tags, partial=True,
-                                        paired_decrefs=paired)
+                                        paired_decrefs=paired,
+                                        decref_groups=evict_groups or None)
         for (idx, slot, held, _), ids in zip(plan, grants):
             if ids is None:
                 grow_ok[idx] = False
@@ -993,7 +1049,8 @@ class PagedSlotPool:
                 lens.at[slot].set(length))
 
     def reserve_batch(self, items: Sequence[Tuple[int, int]],
-                      shared: Optional[Sequence] = None
+                      shared: Optional[Sequence] = None,
+                      evict: Optional[Sequence] = None
                       ) -> List[np.ndarray]:
         """Pre-grant ``[(slot, reserve_tokens), ...]`` in ONE allocator
         critical section, for handing to :meth:`insert` via ``ids=``.
@@ -1008,6 +1065,11 @@ class PagedSlotPool:
         the same critical section* (``alloc_batch(incref_groups=)``), so
         an admission batch costs one acquire with or without sharing —
         and a fully-shared prompt's "allocation" is pure refcounting.
+
+        ``evict`` (page-id groups) are prefix-cache LRU leaves whose
+        references are dropped under the same critical section, before
+        the grants — watermark eviction rides the admission acquire
+        and its freed pages fund this very batch.
         """
         counts, incref_groups = [], []
         for i, (slot, tokens) in enumerate(items):
@@ -1023,7 +1085,8 @@ class PagedSlotPool:
             counts.append(max(n - n_sh, 0))
         return self.pages.alloc_batch(
             counts, [self._rid[slot] for slot, _ in items],
-            incref_groups=incref_groups or None)
+            incref_groups=incref_groups or None,
+            decref_groups=evict or None)
 
     def insert(self, slot: int, req_cache: PyTree, length,
                reserve: Optional[int] = None,
@@ -1153,13 +1216,26 @@ class PagedSlotPool:
         self.lens = lens
 
     # ------------------------------------------------------------ invariants
+    def register_external_holder(self, fn) -> None:
+        """Register a callable returning a ``{page_id: references}``
+        multiset of pages owned *outside* the block tables (the prefix
+        cache's retained trie). :meth:`check` folds these into its
+        "every reference is accounted for" audit, so existing check()
+        call sites keep passing with cache-held pages in play."""
+        self._external_holders.append(fn)
+
     def check(self) -> None:
         """Block tables and the page pool tell one consistent story:
         every allocated page is mapped by exactly ``refcount`` slot
-        rows — one row per holder under prefix sharing, the pre-sharing
-        "mapped by exactly one slot" when every count is 1."""
+        rows plus registered external-holder references (the prefix
+        cache) — one row per holder under prefix sharing, the
+        pre-sharing "mapped by exactly one slot" when every count is
+        1 and no external holder exists."""
         self.pages.check()
         mult: Dict[int, int] = {}
+        for fn in getattr(self, "_external_holders", ()):
+            for p, n in fn().items():
+                mult[int(p)] = mult.get(int(p), 0) + int(n)
         for slot in range(self.capacity):
             row = self._tables[slot]
             real = row[row < self.pages.num_pages]

@@ -142,7 +142,8 @@ class RoundPlan:
 def plan_round(budget: int, decode_rows: Sequence[int],
                prefill_backlog: Sequence[int], *, chunk_tokens: int,
                decode_chunk: int = 1,
-               deprioritized: Sequence[int] = ()) -> RoundPlan:
+               deprioritized: Sequence[int] = (),
+               remaining: Optional[Dict[int, int]] = None) -> RoundPlan:
     """Fill one round's token budget: decode rows first, then fixed-size
     prefill chunks from the partially-prefilled backlog.
 
@@ -167,6 +168,14 @@ def plan_round(budget: int, decode_rows: Sequence[int],
     FIFO is untouched, and an over-deadline request is never starved
     outright — when only late rows remain they chunk in FIFO order, and
     the idle-round progress guarantee applies to them too.
+
+    ``remaining`` maps a backlog row to the prompt tokens it actually
+    has left to prefill. A row whose remainder is under ``chunk_tokens``
+    — the final partial chunk, or a prompt largely served from the
+    prefix cache — is charged only its real cost, so a cache-shortened
+    prefill never blocks budget a deeper backlog row could have used.
+    Rows absent from the map (or with a larger remainder) cost a full
+    chunk, exactly as before.
     """
     if chunk_tokens < 1:
         raise ValueError("chunk_tokens must be >= 1")
@@ -178,11 +187,24 @@ def plan_round(budget: int, decode_rows: Sequence[int],
                    + [r for r in backlog if r in late])
     if not backlog:
         return RoundPlan(decode_tokens, [], 0)
-    n = max(0, int(budget) - decode_tokens) // chunk_tokens
-    if n == 0 and not decode_rows:
-        n = 1
-    n = min(n, len(backlog))
-    return RoundPlan(decode_tokens, backlog[:n], len(backlog) - n)
+
+    def cost(row: int) -> int:
+        if remaining is None:
+            return chunk_tokens
+        return max(1, min(chunk_tokens, int(remaining.get(row,
+                                                          chunk_tokens))))
+
+    left = max(0, int(budget) - decode_tokens)
+    rows: List[int] = []
+    for r in backlog:                       # greedy FIFO walk, no skips
+        c = cost(r)
+        if c > left:
+            break
+        rows.append(r)
+        left -= c
+    if not rows and not decode_rows:
+        rows = backlog[:1]                  # progress guarantee
+    return RoundPlan(decode_tokens, rows, len(backlog) - len(rows))
 
 
 @dataclasses.dataclass

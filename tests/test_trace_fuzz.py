@@ -1,0 +1,167 @@
+"""Randomized lifecycle fuzz for the paged serving stack (DESIGN.md §14).
+
+Two tiers, both driven by ``repro.serve.fuzz``'s seeded generators:
+
+  * **pool-level** — ``PoolFuzzHarness`` replays the engine's exact
+    allocator/cache call pattern (adoption increfs and eviction decrefs
+    riding single ``alloc_batch`` calls, donation riding retirement's
+    ``free_batch``) against a real ``PagePool`` + ``PrefixCache``, with
+    the declared invariants audited after every simulated round: zero
+    page leaks, every reference accounted (refcount >= 1 for cache-held
+    and table pages), no shared page ever written, FIFO grant order,
+    empty arena after a full drain. No model, no jax dispatch —
+    hundreds of seeds run inside tier-1.
+  * **engine-level** — ``gen_trace`` traces (shared system prompts,
+    multi-turn follow-ups resolved against real generated replies,
+    randomized cancellation) served by two real ``SlotServeEngine``s,
+    cache on vs off. The oracle is the §11/§14 contract itself: greedy
+    streams bit-identical wherever both runs served the same resolved
+    prompt to completion, plus a leak-free drain. A few seeds run in
+    tier-1; the 200-seed sweep is the nightly ``slow`` lane.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional in this image (tests/_hypothesis_compat.py)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve.engine import SlotServeEngine
+from repro.serve.fuzz import PoolFuzzHarness, drive_trace, gen_trace
+
+#: the acceptance bar: this many seeded lifecycle traces must run clean
+N_POOL_TRACES = 200
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_arch("qwen3-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ========================================================== pool level
+def test_pool_lifecycle_fuzz_200_seeded_traces():
+    """The §14 acceptance sweep: ``N_POOL_TRACES`` seeded traces of the
+    full admit/grow/retire-donate/evict lifecycle, invariants audited
+    every round, drained leak-free. Half the seeds run cache-off as the
+    refcount-protocol control group."""
+    for seed in range(N_POOL_TRACES // 2):
+        for cache in (True, False):
+            h = PoolFuzzHarness(seed, num_pages=48, page_size=4,
+                                cache=cache)
+            h.run(rounds=30)
+            assert h.pool.in_use == 0
+
+
+def test_pool_fuzz_tight_arena_forces_eviction():
+    """A small arena keeps the watermark hot: eviction riders fire on
+    most rounds and the invariants must still hold."""
+    hits = 0
+    for seed in range(20):
+        h = PoolFuzzHarness(1000 + seed, num_pages=16, page_size=4,
+                            cache=True, watermark_pages=3)
+        h.run(rounds=40)
+        hits += h.cache.pages_evicted if h.cache else 0
+    assert hits > 0                              # pressure actually bit
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       num_pages=st.integers(min_value=12, max_value=96),
+       page_size=st.sampled_from([2, 4, 8]),
+       cache=st.booleans())
+def test_pool_fuzz_property(seed, num_pages, page_size, cache):
+    """Property form over randomized arena shapes (hypothesis when
+    available, the seeded compat shim otherwise)."""
+    h = PoolFuzzHarness(seed, num_pages=num_pages, page_size=page_size,
+                        cache=cache)
+    h.run(rounds=25)
+    assert h.pool.in_use == 0
+
+
+# ======================================================== engine level
+def _run_trace_pair(model, params, seed, *, vocab):
+    """One seeded trace through cache-on and cache-off engines; returns
+    the two result dicts plus the cache-on engine for stat asserts."""
+    results = {}
+    eng_on = None
+    for mode in ("off", "on"):
+        events = gen_trace(seed, n_requests=6, vocab=vocab,
+                           max_prompt=12, max_new=6, p_cancel=0.15)
+        eng = SlotServeEngine(model, params, capacity=3, max_len=128,
+                              kv_layout="paged", page_size=4, seed=0,
+                              prefix_cache=mode, prefill_chunk_tokens=4,
+                              decode_chunk=2)
+        results[mode] = drive_trace(eng, events)
+        assert eng.grant_log == sorted(eng.grant_log)   # FIFO grants
+        if mode == "on":
+            eng.drop_prefix_cache()
+            eng_on = eng
+        eng.pool.check()
+        assert eng.pool.pages.in_use == 0               # leak-free drain
+    return results["off"], results["on"], eng_on
+
+
+def _assert_streams_match(off, on):
+    """The §14 bit-identity oracle: every rid both runs served to
+    completion from the same resolved prompt must produce the same
+    greedy stream. (Cancellation timing is round-based, so a run that
+    prefills faster may cancel at a different point — those rids, and
+    any child turn whose resolved prompt therefore differs, are exactly
+    the ones the contract excludes.)"""
+    compared = 0
+    for rid, a in off.items():
+        b = on.get(rid)
+        if b is None or a["cancelled"] or b["cancelled"]:
+            continue
+        if not np.array_equal(a["prompt"], b["prompt"]):
+            continue                       # divergent cancelled parent
+        assert a["out"] == b["out"], \
+            f"rid {rid}: cache-on stream diverged from cache-off"
+        compared += 1
+    assert compared > 0                    # the oracle actually engaged
+
+
+def test_engine_trace_fuzz_smoke(lm_setup):
+    """Tier-1: two seeded traces through the full engine pair."""
+    cfg, model, params = lm_setup
+    for seed in (0, 1):
+        off, on, _ = _run_trace_pair(model, params, seed,
+                                     vocab=cfg.vocab_size)
+        _assert_streams_match(off, on)
+
+
+def test_engine_trace_with_reuse_hits_cache(lm_setup):
+    """A trace built to collide (one system prompt, heavy multi-turn)
+    must actually exercise the cache: hits > 0, prefill tokens saved."""
+    cfg, model, params = lm_setup
+    events = gen_trace(42, n_requests=6, vocab=cfg.vocab_size,
+                       max_prompt=12, max_new=6, n_system_prompts=1,
+                       p_shared=0.9, p_multi_turn=0.6, p_cancel=0.0)
+    eng = SlotServeEngine(model, params, capacity=3, max_len=128,
+                          kv_layout="paged", page_size=4, seed=0,
+                          prefix_cache="on", prefill_chunk_tokens=4,
+                          decode_chunk=2)
+    drive_trace(eng, events)
+    st_ = eng.stats()
+    assert st_["cache_hits"] + st_["prefix_hits"] > 0
+    eng.drop_prefix_cache()
+    assert eng.pool.pages.in_use == 0
+
+
+@pytest.mark.slow
+def test_engine_trace_fuzz_nightly_sweep(lm_setup):
+    """The nightly lane: 200 seeded engine traces, cache on vs off,
+    bit-identity + leak oracle on every one."""
+    cfg, model, params = lm_setup
+    for seed in range(200):
+        off, on, _ = _run_trace_pair(model, params, seed,
+                                     vocab=cfg.vocab_size)
+        _assert_streams_match(off, on)
