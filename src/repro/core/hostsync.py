@@ -141,15 +141,56 @@ class LockStats:
         self.held_s = 0.0
         self._recent = collections.deque(maxlen=self.contention_window)
         self._t_acquired = 0.0
+        # holder watchdog: a critical section held past the threshold is
+        # a liveness fault (a stuck/slow holder starves every waiter —
+        # the case the paper's analysis assumes away). The threshold
+        # survives reset_stats (it is configuration, not a counter).
+        self.watchdog_threshold_s = getattr(self, "watchdog_threshold_s",
+                                            None)
+        self.watchdog_trips = 0
+        self._held_now = False
+        self._watchdog_flagged = False
 
     def _note_acquire(self, contended: bool) -> None:
         self.acquires += 1
         self.contended_acquires += int(contended)
         self._recent.append(int(contended))
         self._t_acquired = time.perf_counter()
+        self._held_now = True
+        self._watchdog_flagged = False
 
     def _note_release(self) -> None:
-        self.held_s += time.perf_counter() - self._t_acquired
+        held = time.perf_counter() - self._t_acquired
+        self.held_s += held
+        self._held_now = False
+        if (self.watchdog_threshold_s is not None
+                and held > self.watchdog_threshold_s
+                and not self._watchdog_flagged):
+            self.watchdog_trips += 1
+        self._watchdog_flagged = False
+
+    def set_watchdog(self, threshold_s: Optional[float]) -> None:
+        """Arm (or disarm with None) the holder watchdog: any critical
+        section held longer than ``threshold_s`` counts one
+        ``watchdog_trips`` — at release, or earlier if a waiter polls
+        :meth:`watchdog_check` while the holder is stuck."""
+        self.watchdog_threshold_s = threshold_s
+
+    def watchdog_check(self) -> bool:
+        """Poll form for waiters/monitors: True iff the lock is held
+        *right now* past the armed threshold. Counts each over-threshold
+        hold once (the release-side check skips an already-flagged
+        hold). Reads owner-side timestamps without synchronizing — a
+        racy read can only mis-time by one poll interval, never corrupt
+        the lock."""
+        if self.watchdog_threshold_s is None or not self._held_now:
+            return False
+        if time.perf_counter() - self._t_acquired <= self.watchdog_threshold_s:
+            return False
+        if not self._watchdog_flagged:
+            self._watchdog_flagged = True
+            self.watchdog_trips += 1
+        return True
 
     def recent_contention(self) -> float:
         """Fraction of the last ``contention_window`` acquires that were
@@ -168,6 +209,7 @@ class LockStats:
             "contended_acquires": self.contended_acquires,
             "held_s": self.held_s,
             "recent_contention": self.recent_contention(),
+            "watchdog_trips": self.watchdog_trips,
         }
 
 
@@ -340,6 +382,16 @@ class AdaptiveMutex:
 
     def reset_stats(self) -> None:
         self.inner.reset_stats()
+
+    def set_watchdog(self, threshold_s: Optional[float]) -> None:
+        self.inner.set_watchdog(threshold_s)
+
+    def watchdog_check(self) -> bool:
+        return self.inner.watchdog_check()
+
+    @property
+    def watchdog_trips(self) -> int:
+        return self.inner.watchdog_trips
 
     def lock_stats(self) -> dict:
         st = self.inner.lock_stats()

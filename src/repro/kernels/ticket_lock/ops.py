@@ -58,6 +58,43 @@ def ticket_lock_window(arrival, m=None, b=None, *, window: int = 32,
                           interpret=interpret, use_kernel=use_kernel)
 
 
+def ticket_lock_bounded_oracle(arrivals, holds, timeouts):
+    """Step-exact oracle for the *bounded-wait* FIFO ticket mutex: the
+    ground truth ``SyncLibrary.plan_mutex_bounded`` must reach on every
+    backend (DESIGN.md §15).
+
+    Tickets issue in stable arrival order. Walking tickets in order with
+    a running lock-free time: requester ``i``'s turn arrives at
+    ``max(arrival_i, t_free)``; if the wait exceeds ``timeout_i`` the
+    ticket *burns* — never granted, zero hold, the turn passes
+    immediately (the live ``TicketMutex`` timeout discipline) — else it
+    holds for ``hold_i``. One forward pass is exact because a ticket's
+    fate depends only on earlier tickets' fates.
+
+    Returns ``(granted, grant, release)``: bool mask + turn/release
+    times, caller order.
+    """
+    arrivals = np.asarray(arrivals, np.float64)
+    holds = np.asarray(holds, np.float64)
+    timeouts = np.asarray(timeouts, np.float64)
+    n = arrivals.shape[0]
+    granted = np.zeros(n, bool)
+    grant = np.zeros(n, np.float64)
+    release = np.zeros(n, np.float64)
+    t_free = -np.inf
+    for i in np.argsort(arrivals, kind="stable"):
+        g = max(float(arrivals[i]), t_free)
+        grant[i] = g
+        if g - arrivals[i] > timeouts[i]:
+            release[i] = g                    # burned: pass the turn on
+            t_free = g
+        else:
+            granted[i] = True
+            release[i] = g + holds[i]
+            t_free = release[i]
+    return granted, grant, release
+
+
 def ticket_lock_batch_window(arrival, counts, *, window: int = 32,
                              interpret: bool = True,
                              use_kernel: bool = True):

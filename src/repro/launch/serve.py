@@ -57,7 +57,9 @@ from repro.configs import get_arch
 from repro.core.abstraction import PrimitiveKind
 from repro.models import build_model
 from repro.serve.engine import RequestState, ServeEngine, SlotServeEngine
+from repro.serve.faults import FaultPlan
 from repro.serve.frontend import AsyncFrontend, IntakeFullError
+from repro.serve.kv_pages import PageLeakError
 from repro.serve.scheduler import plan_admission
 from repro.sync import SyncLibrary
 
@@ -81,9 +83,21 @@ def make_sync_library(args) -> SyncLibrary:
                         else args.admission_sem))
 
 
+def make_fault_plan(args):
+    """The CLI's chaos knob: one seeded FaultPlan driving every
+    transient injection site (allocator abort, dispatch exception,
+    stuck holder) at ``--fault-rate``, or None when chaos is off."""
+    if getattr(args, "fault_rate", 0.0) <= 0.0:
+        return None
+    return FaultPlan(args.fault_seed, alloc_rate=args.fault_rate,
+                     dispatch_rate=args.fault_rate,
+                     stuck_rate=args.fault_rate, stuck_hold_s=5e-3)
+
+
 def make_engine(model, params, args, sync=None) -> SlotServeEngine:
     """One engine from the CLI knobs — shared by every driver mode."""
     max_len = args.prompt_len + args.new_tokens + 1
+    fault_plan = make_fault_plan(args)
     return SlotServeEngine(
         model, params, capacity=args.capacity, max_len=max_len,
         decode_chunk=args.decode_chunk, seed=args.seed,
@@ -95,7 +109,33 @@ def make_engine(model, params, args, sync=None) -> SlotServeEngine:
         cache_watermark=args.cache_watermark,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
         round_token_budget=args.round_token_budget,
+        fault_plan=fault_plan,
+        allocator_watchdog_s=(1e-3 if fault_plan is not None else None),
         sync=sync if sync is not None else make_sync_library(args))
+
+
+def enforce_leak_gate(engine) -> None:
+    """Hard post-drain leak gate: smoke runs fail LOUDLY on a leak — a
+    non-zero exit, not a printed number nobody reads. The prefix cache's
+    held pages are intentional retention, so it is dropped first;
+    whatever remains in use after a full drain is a leak."""
+    if engine.kv_layout != "paged":
+        return
+    if engine.prefix_cache is not None:
+        engine.drop_prefix_cache()
+    try:
+        engine.pool.check()
+    except (PageLeakError, AssertionError) as e:
+        print(f"[serve] FATAL: post-drain page-leak check failed: {e}")
+        raise SystemExit(1)
+    leaked = int(engine.pool.pages.in_use)
+    if leaked:
+        print(f"[serve] FATAL: {leaked} of "
+              f"{engine.pool.pages.num_pages} pages leaked after "
+              f"drain (free-list {engine.pool.pages.n_free})")
+        raise SystemExit(1)
+    print(f"[serve] post-drain leak check: OK "
+          f"(0 of {engine.pool.pages.num_pages} pages leaked)")
 
 
 def run_slot_engine(model, params, prompts, args, arrivals_steps=None,
@@ -310,6 +350,17 @@ def main(argv=None):
                     help="open loop: bound on the ungranted population "
                          "(front-end intake + engine FIFO queue); "
                          "submits past it are shed explicitly")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos mode: per-consult probability of each "
+                         "injected transient fault (allocator batch "
+                         "abort, dispatch exception, stuck lock holder "
+                         "— serve/faults.py, DESIGN.md §15); 0 = off. "
+                         "Every fault must be recovered: the run still "
+                         "finishes all requests and the post-drain "
+                         "leak gate still applies")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="FaultPlan seed — same seed + same workload "
+                         "injects the same faults at the same points")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="also run the old per-request loop")
@@ -409,6 +460,15 @@ def main(argv=None):
         elif args.prefix_cache != "off":
             print("[serve] prefix cache requested but disabled "
                   "(needs paged layout + greedy chunked prefill)")
+    if engine.fault_plan is not None:
+        fp = engine.fault_plan
+        print(f"[serve] chaos (seed {fp.seed}, rate {args.fault_rate}): "
+              f"{int(st['faults_injected'])} faults injected "
+              f"{dict(fp.by_kind)}, "
+              f"{int(st['rounds_retried'])} rounds retried, "
+              f"{int(st['requests_quarantined'])} quarantined, "
+              f"{int(st['failed'])} failed, "
+              f"{int(st.get('watchdog_trips', 0))} watchdog trips")
     fifo_ok = engine.grant_log == sorted(engine.grant_log)
     print(f"[serve] FIFO grant order: {'OK' if fifo_ok else 'VIOLATED'} "
           f"({len(engine.grant_log)} grants, semaphore in-flight "
@@ -432,6 +492,8 @@ def main(argv=None):
                   f"{report['leaked_pages']} (free-list "
                   f"{engine.pool.pages.n_free}/"
                   f"{engine.pool.pages.num_pages})")
+
+    enforce_leak_gate(engine)
 
     if args.legacy:
         tokens, dt_old, waits = run_legacy_loop(model, params, prompts, args)

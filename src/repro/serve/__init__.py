@@ -8,9 +8,14 @@ from repro.serve.engine import (  # noqa: F401
     ServeRequest,
     SlotServeEngine,
 )
+from repro.serve.faults import (  # noqa: F401
+    FaultPlan,
+    InjectedFault,
+)
 from repro.serve.frontend import (  # noqa: F401
     AsyncFrontend,
     IntakeFullError,
+    RequestFailedError,
     StreamHandle,
 )
 from repro.serve.kv_pages import (  # noqa: F401

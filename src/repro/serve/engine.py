@@ -39,6 +39,7 @@ are handed (per-slot ``len`` vectors; models/blocks.block_decode).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import enum
 import math
@@ -49,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.kv_pages import PagedSlotPool, PrefixIndex
 from repro.serve.prefix_cache import PrefixCache, cache_key_suffix
 from repro.serve.kv_slots import SlotPool
@@ -57,6 +59,20 @@ from repro.serve.scheduler import (AdmissionController,
 from repro.sync import SyncLibrary
 
 PyTree = Any
+
+
+class RoundDispatchError(RuntimeError):
+    """A scheduler round's jitted dispatch failed (DESIGN.md §15).
+
+    Carries the blamed request id when the underlying fault named one;
+    the engine's recovery loop rolls the round back, retries with
+    backoff, and quarantines the blamed request after
+    ``quarantine_after`` consecutive failures.
+    """
+
+    def __init__(self, cause: BaseException, rid: Optional[int] = None):
+        self.rid = rid
+        super().__init__(f"round dispatch failed: {cause!r}")
 
 #: Write-drop sentinel for chunked prefill: pad lanes of a partial last
 #: chunk (and rows not advancing this round) carry this as their cache
@@ -79,6 +95,13 @@ class RequestState(str, enum.Enum):
     past its deadline, in which case eviction expires it instead of
     burning pages regenerating a stream that can no longer meet its
     SLO.
+
+    ``FAILED`` (DESIGN.md §15) is the quarantine terminal: after
+    ``quarantine_after`` consecutive round failures blamed on one
+    request, the engine evicts just that request — its error surfaces
+    on the caller's handle, its pages ride the normal deferred-free
+    path, and the surviving rows' token streams stay bit-identical to
+    a fault-free run.
     """
     QUEUED = "queued"
     PREFILLING = "prefilling"
@@ -86,6 +109,7 @@ class RequestState(str, enum.Enum):
     FINISHED = "finished"
     CANCELLED = "cancelled"
     EXPIRED = "expired"
+    FAILED = "failed"
 
     @property
     def terminal(self) -> bool:
@@ -94,7 +118,8 @@ class RequestState(str, enum.Enum):
 
 _TERMINAL_STATES = frozenset({RequestState.FINISHED,
                               RequestState.CANCELLED,
-                              RequestState.EXPIRED})
+                              RequestState.EXPIRED,
+                              RequestState.FAILED})
 
 
 @dataclasses.dataclass
@@ -189,6 +214,9 @@ class ServeRequest:
     #: chunked-prefill rounds this request's prompt consumed (0 when the
     #: engine prefilled it in one shot); cumulative across preemptions
     prefill_chunks: int = 0
+    #: why the request FAILED (quarantine path, DESIGN.md §15); None for
+    #: every other terminal state
+    error: Optional[str] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -321,6 +349,10 @@ class SlotServeEngine:
                  cache_watermark: Optional[float] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  round_token_budget: Optional[int] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 quarantine_after: int = 3,
+                 retry_backoff_s: float = 0.001,
+                 allocator_watchdog_s: Optional[float] = None,
                  sync: Optional[SyncLibrary] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.frontend is not None:
@@ -444,6 +476,25 @@ class SlotServeEngine:
                     capacity, service_steps=float(max_len)))
         else:
             self.pool = SlotPool(model, capacity, max_len)
+        # ---- fault tolerance (DESIGN.md §15): deterministic injection,
+        # round-level recovery, and the stuck-holder watchdog. All of it
+        # is dormant (zero extra allocator acquires, zero extra state
+        # transitions) unless a plan is installed or a round fails.
+        self.fault_plan = fault_plan
+        self.quarantine_after = max(int(quarantine_after), 1)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.rounds_retried = 0
+        self.requests_quarantined = 0
+        #: rid -> consecutive round failures blamed on it; cleared by
+        #: any successful dispatch
+        self._round_failures: Dict[int, int] = {}
+        if kv_layout == "paged":
+            if fault_plan is not None:
+                self.pool.pages.fault_hook = fault_plan.alloc_hook
+            if allocator_watchdog_s is not None:
+                wd = getattr(self.pool.pages.mutex, "set_watchdog", None)
+                if wd is not None:
+                    wd(allocator_watchdog_s)
         self.admission = AdmissionController(capacity, lib=self.sync)
         self._admission_planner = (
             self.sync.semaphore_planner(capacity, window=self.plan_window)
@@ -725,8 +776,76 @@ class SlotServeEngine:
         """Return cancellation-deferred pages when the round ends
         without reaching ``_retire_batch`` (early exits of ``step``)."""
         if self._deferred_free:
-            self.pool.pages.free_batch(self._deferred_free)
+            self._free_batch_safe(self._deferred_free)
             self._deferred_free = []
+
+    # -------------------------------------------------- fault recovery (§15)
+    def _faults_off(self):
+        """Context manager suppressing fault injection — recovery and
+        compensation paths run under this so a rollback can never
+        itself be faulted into a wedge."""
+        if self.fault_plan is not None:
+            return self.fault_plan.suspended()
+        return contextlib.nullcontext()
+
+    def _free_batch_safe(self, groups) -> List[int]:
+        """``pages.free_batch`` that survives an injected mid-batch
+        fault: the pool's undo log already rolled the batch back, so
+        the retry (injection suspended) applies it cleanly. Real
+        allocator errors (``PageLeakError``) still propagate — only
+        deliberate faults are absorbed."""
+        if not groups:
+            return []
+        try:
+            return self.pool.pages.free_batch(groups)
+        except InjectedFault:
+            with self._faults_off():
+                return self.pool.pages.free_batch(groups)
+
+    def _quarantine(self, rid: int, exc: BaseException) -> None:
+        """Evict exactly one repeatedly-blamed request into the FAILED
+        terminal state. Its pages ride the normal deferred-free path
+        (the next retirement batch, or the round-end flush) and its
+        slot + semaphore grant free immediately, so survivors keep
+        decoding untouched. Nothing is donated to the prefix cache —
+        a failed request's K/V is suspect by definition."""
+        slot = next(s for s, r in self.active.items() if r.rid == rid)
+        req = self.active.pop(slot)
+        req.state = RequestState.FAILED
+        req.error = str(exc)
+        req.finish_step = self.step_clock
+        req.finish_s = time.perf_counter()
+        self._steps_left[slot] = 0
+        self._grow_cap[slot] = 0
+        self._pf_pos[slot] = 0
+        self._pf_end[slot] = 0
+        self._gen_reg[slot] = 0
+        if self.kv_layout == "paged":
+            held = self.pool.evict(slot, free_pages=False)
+            if held is not None and held.size:
+                self._deferred_free.append(held)
+        else:
+            self.pool.evict(slot)
+        self.admission.release_slot()
+        self.finished.append(req)
+        self.requests_quarantined += 1
+
+    def _recover_round(self, exc: BaseException) -> None:
+        """Blame-attribute one round failure and quarantine the culprit
+        once it crosses ``quarantine_after`` consecutive failures. The
+        fault's own rid wins when it names a live request; otherwise
+        blame falls on the newest grant — the request whose admission
+        most recently changed the round's shape."""
+        live = {r.rid for r in self.active.values()}
+        if not live:
+            return
+        rid = getattr(exc, "rid", None)
+        if rid is None or rid not in live:
+            rid = max(live)
+        self._round_failures[rid] = self._round_failures.get(rid, 0) + 1
+        if self._round_failures[rid] >= self.quarantine_after:
+            self._quarantine(rid, exc)
+            self._round_failures.pop(rid, None)
 
     # ------------------------------------------------------------- admission
     def _planned_admit_count(self) -> int:
@@ -840,6 +959,23 @@ class SlotServeEngine:
                           if r == 1 and int(p) not in adopt)
         return credit
 
+    def _abort_admission(self, staged_pairs, evict_groups) -> None:
+        """An injected allocator fault aborted the admission batch (the
+        pool's undo log already rolled every grant/incref/decref back).
+        Un-stage: slots and semaphore grants return, the staged
+        requests go back to the queue front in arrival order (FIFO
+        intact — they re-admit next round), and the planned cache
+        evictions are re-applied under suspended injection: the trie
+        already forgot those pages, so dropping their decrefs would
+        leak them."""
+        for req, slot in reversed(staged_pairs):
+            self.pool.evict(slot, free_pages=False)
+            self.admission.release_slot()
+            self.queue.appendleft(req)
+        with self._faults_off():
+            self._free_batch_safe(evict_groups)
+        self.rounds_retried += 1
+
     def _admit(self) -> int:
         """Admit the FIFO front the Algorithm-5 timeline grants now.
 
@@ -945,11 +1081,16 @@ class SlotServeEngine:
         # (private grants, shared-prefix increfs, AND cache-eviction
         # decrefs together)
         if self.kv_layout == "paged":
-            grants = self.pool.reserve_batch(
-                [(slot, grant)
-                 for (_, slot, _, _, _, grant, _, _, _) in staged],
-                shared=[sh_ids for (*_, sh_ids, _, _) in staged],
-                evict=evict_groups or None)
+            try:
+                grants = self.pool.reserve_batch(
+                    [(slot, grant)
+                     for (_, slot, _, _, _, grant, _, _, _) in staged],
+                    shared=[sh_ids for (*_, sh_ids, _, _) in staged],
+                    evict=evict_groups or None)
+            except InjectedFault:
+                self._abort_admission([(t[0], t[1]) for t in staged],
+                                      evict_groups)
+                return 0
         else:
             grants = [None] * len(staged)
 
@@ -1132,10 +1273,16 @@ class SlotServeEngine:
         # one-shot (private grants, shared-prefix increfs, and cache-
         # eviction decrefs together)
         if self.kv_layout == "paged":
-            grants = self.pool.reserve_batch(
-                [(slot, grant) for (_, slot, _, grant, _, _, _) in staged],
-                shared=[sh_ids for (*_, sh_ids, _, _) in staged],
-                evict=evict_groups or None)
+            try:
+                grants = self.pool.reserve_batch(
+                    [(slot, grant)
+                     for (_, slot, _, grant, _, _, _) in staged],
+                    shared=[sh_ids for (*_, sh_ids, _, _) in staged],
+                    evict=evict_groups or None)
+            except InjectedFault:
+                self._abort_admission([(t[0], t[1]) for t in staged],
+                                      evict_groups)
+                return 0
         else:
             grants = [None] * len(staged)
 
@@ -1250,7 +1397,7 @@ class SlotServeEngine:
             deferred = self._deferred_free + deferred
             self._deferred_free = []
         if deferred:
-            self.pool.pages.free_batch(deferred)
+            self._free_batch_safe(deferred)
 
     def _retire(self, slot: int, offset: int) -> None:
         self._retire_batch([(slot, offset)])
@@ -1267,7 +1414,16 @@ class SlotServeEngine:
         which is exactly why late rows are picked as victims first."""
         req = self.active.pop(slot)
         late = req.past_deadline(self.step_clock)
-        self.pool.evict(slot)                  # immediate free: rare path
+        if self.kv_layout == "paged":
+            # immediate free (rare path), but through the fault-safe
+            # helper: the preemption exists to reclaim pages NOW for a
+            # starving slot, so an injected fault in the free must not
+            # strand them
+            held = self.pool.evict(slot, free_pages=False)
+            if held is not None and held.size:
+                self._free_batch_safe([held])
+        else:
+            self.pool.evict(slot)
         self.admission.release_slot()
         self._steps_left[slot] = 0
         self._grow_cap[slot] = 0
@@ -1403,8 +1559,22 @@ class SlotServeEngine:
                     deficit = (needed + self._watermark_pages()
                                - self.pool.pages.n_free)
                     evict_groups, _ = self._plan_evictions(deficit)
-            _, split_ok = self.pool.prepare_batch(
-                items, splits, evict_groups=evict_groups)
+            try:
+                _, split_ok = self.pool.prepare_batch(
+                    items, splits, evict_groups=evict_groups)
+            except InjectedFault:
+                # aborted mid-batch: the pool's undo log rolled every
+                # grant back. Re-apply the planned cache evictions (the
+                # trie already forgot those pages) under suspended
+                # injection, then pause every decoding row for the
+                # round — frozen rows emit nothing and their lengths
+                # roll back after the dispatch, so survivor streams
+                # stay bit-identical and the top-ups retry next round.
+                with self._faults_off():
+                    self._free_batch_safe(evict_groups)
+                self.rounds_retried += 1
+                self.pauses += len(decode_live)
+                return set(decode_live), set()
             self.cow_splits += sum(bool(ok) for ok in split_ok)
             # a slot pauses when it cannot cover THIS chunk (a denied
             # lookahead tail is not a reason to stall the row) or when
@@ -1461,6 +1631,41 @@ class SlotServeEngine:
         if not self.active:
             self._flush_deferred_frees()
             return 0
+        # round-level recovery (DESIGN.md §15): a failed dispatch rolls
+        # the round back (the PRNG key is the only host state the
+        # dispatch section had consumed) and retries with linear
+        # backoff; repeated failures blamed on one request quarantine
+        # exactly that request. The attempt cap bounds even an
+        # always-faulting run: every failure advances some rid's
+        # streak, so quarantines drain the active set before it trips.
+        attempts = 0
+        max_attempts = self.quarantine_after * (len(self.active) + 1)
+        while True:
+            try:
+                n = self._run_round()
+            except (InjectedFault, RoundDispatchError) as exc:
+                attempts += 1
+                self.rounds_retried += 1
+                self._recover_round(exc)
+                if not self.active:
+                    self._flush_deferred_frees()
+                    return 0
+                if attempts >= max_attempts:
+                    raise
+                if self.retry_backoff_s > 0:
+                    time.sleep(self.retry_backoff_s * attempts)
+                continue
+            self._round_failures.clear()
+            return n
+
+    def _run_round(self) -> int:
+        """The round body ``step``'s recovery loop drives: plan, grow,
+        dispatch, harvest, retire. Raises ``InjectedFault`` /
+        ``RoundDispatchError`` only from the dispatch section, which
+        restores the PRNG key before re-raising — everything the
+        section had not yet touched (lengths, cursors, block tables)
+        is still the pre-round state, so a retry replays the round
+        exactly."""
         steps = self.decode_chunk
         chunked = self.prefill_chunk > 0
         planned: List[int] = []
@@ -1512,32 +1717,48 @@ class SlotServeEngine:
             # rolled-back length makes the resumed chunk rewrite every
             # dropped position before its first read
             view["pages"] = self.pool.masked_table(paused)
+        # dispatch section: the PRNG split is the ONLY host state
+        # consumed before the jitted call returns, so restoring the key
+        # on failure rolls the whole section back — a retried round
+        # replays with the same key and (under greedy decoding) the
+        # same tokens
+        key0 = self._key
         self._key, sub = jax.random.split(self._key)
-        if chunked:
-            C = self.prefill_chunk
-            pf_tok = np.zeros((self.capacity, C), np.int32)
-            pf_qpos = np.zeros((self.capacity, C), np.int32)
-            pf_wpos = np.full((self.capacity, C), _DROP_POS, np.int32)
-            valid: Dict[int, int] = {}
-            for s in chunk_rows:
-                p0 = int(self._pf_pos[s])
-                v = int(min(C, self._pf_end[s] - p0))
-                pf_tok[s, :v] = self.active[s].prompt[p0:p0 + v]
-                pf_qpos[s, :] = p0 + np.arange(C)
-                pf_wpos[s, :v] = p0 + np.arange(v)
-                valid[s] = v
-            cache, tok, toks, pf_logits = self._round(
-                self.params, view,
-                jnp.asarray(self._last_tok), jnp.asarray(frozen),
-                jnp.asarray(pf_tok), jnp.asarray(pf_qpos),
-                jnp.asarray(pf_wpos), sub,
-                steps=steps, chunk=C if chunk_rows else 0)
-        else:
-            cache, tok, toks = self._chunk(
-                self.params, view,
-                jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
-                steps=steps)
-            pf_logits = None
+        try:
+            if self.fault_plan is not None:
+                self.fault_plan.dispatch(
+                    [r.rid for r in self.active.values()])
+            if chunked:
+                C = self.prefill_chunk
+                pf_tok = np.zeros((self.capacity, C), np.int32)
+                pf_qpos = np.zeros((self.capacity, C), np.int32)
+                pf_wpos = np.full((self.capacity, C), _DROP_POS, np.int32)
+                valid: Dict[int, int] = {}
+                for s in chunk_rows:
+                    p0 = int(self._pf_pos[s])
+                    v = int(min(C, self._pf_end[s] - p0))
+                    pf_tok[s, :v] = self.active[s].prompt[p0:p0 + v]
+                    pf_qpos[s, :] = p0 + np.arange(C)
+                    pf_wpos[s, :v] = p0 + np.arange(v)
+                    valid[s] = v
+                cache, tok, toks, pf_logits = self._round(
+                    self.params, view,
+                    jnp.asarray(self._last_tok), jnp.asarray(frozen),
+                    jnp.asarray(pf_tok), jnp.asarray(pf_qpos),
+                    jnp.asarray(pf_wpos), sub,
+                    steps=steps, chunk=C if chunk_rows else 0)
+            else:
+                cache, tok, toks = self._chunk(
+                    self.params, view,
+                    jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
+                    steps=steps)
+                pf_logits = None
+        except InjectedFault:
+            self._key = key0
+            raise
+        except Exception as exc:
+            self._key = key0
+            raise RoundDispatchError(exc) from exc
         self.decode_dispatches += 1
         self.pool.adopt(cache)
         self._last_tok = np.array(tok)     # writable copy (inserts mutate)
@@ -1658,7 +1879,7 @@ class SlotServeEngine:
             return 0
         groups = self.prefix_cache.drop_all()
         if groups:
-            self.pool.pages.free_batch(groups)
+            self._free_batch_safe(groups)
         return int(sum(g.size for g in groups))
 
     # -------------------------------------------------------------- reporting
@@ -1691,6 +1912,14 @@ class SlotServeEngine:
             "terminal": float(len(term)),
             "cancelled": float(self.cancellations),
             "expired": float(self.expiries),
+            # fault-tolerance ledger (§15): all structurally zero in a
+            # fault-free run
+            "failed": float(sum(
+                1 for r in term if r.state is RequestState.FAILED)),
+            "faults_injected": float(
+                self.fault_plan.injected if self.fault_plan else 0),
+            "rounds_retried": float(self.rounds_retried),
+            "requests_quarantined": float(self.requests_quarantined),
             "tokens": float(toks),
             "decode_dispatches": float(self.decode_dispatches),
             "p50_wait_steps": float(np.median(waits)) if len(granted)
@@ -1752,6 +1981,8 @@ class SlotServeEngine:
                 "lock_acquires_per_token": (
                     float(ls["acquires"]) / float(max(toks, 1))),
                 "lock_retunes": float(ls.get("retunes", 0)),
+                "watchdog_trips": float(ls.get("watchdog_trips", 0)),
+                "aborted_batches": float(pp.aborted_batches),
                 # what a one-lock-per-page allocator (the PR 3 baseline
                 # framing) would have paid for the same page traffic
                 "per_page_lock_acquires": float(

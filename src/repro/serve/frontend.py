@@ -60,6 +60,7 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.serve.engine import RequestState, ServeRequest, SlotServeEngine
+from repro.serve.faults import FaultPlan, InjectedFault
 
 
 class IntakeFullError(RuntimeError):
@@ -69,6 +70,15 @@ class IntakeFullError(RuntimeError):
     population has reached ``intake_limit``. Clients retry with backoff
     or report overload upstream; the front-end never queues past the
     bound."""
+
+
+class RequestFailedError(RuntimeError):
+    """The request was quarantined by the engine (FAILED terminal,
+    DESIGN.md §15).
+
+    Raised by the stream iterator *after* delivering every token the
+    request produced before failing — the client keeps the partial
+    stream and gets a typed error instead of a silent end."""
 
 
 class StreamHandle:
@@ -103,6 +113,9 @@ class StreamHandle:
         self._cancel_requested = False
         self._closed = False        # sentinel delivered
         self._state_override: Optional[RequestState] = None
+        #: set when the engine quarantined this request (FAILED): the
+        #: iterator raises :class:`RequestFailedError` at stream end
+        self.error: Optional[str] = None
 
     # ------------------------------------------------------------- inspection
     @property
@@ -157,11 +170,15 @@ class StreamHandle:
     async def __anext__(self) -> int:
         item = await self._queue.get()
         if item is None:
+            if self.error is not None:
+                raise RequestFailedError(self.error)
             raise StopAsyncIteration
         return item
 
     async def collect(self) -> List[int]:
-        """Drain the stream to completion; returns every token."""
+        """Drain the stream to completion; returns every token.
+        Raises :class:`RequestFailedError` (after the partial stream
+        was consumed) when the request was quarantined."""
         return [tok async for tok in self]
 
 
@@ -180,11 +197,20 @@ class AsyncFrontend:
     """
 
     def __init__(self, engine: SlotServeEngine, *,
-                 intake_limit: int = 256, round_hook=None):
+                 intake_limit: int = 256, round_hook=None,
+                 fault_plan: Optional[FaultPlan] = None):
         if intake_limit < 1:
             raise ValueError("intake_limit must be >= 1")
         self.engine = engine
         self.intake_limit = intake_limit
+        #: deterministic injection (DESIGN.md §15): the front-end
+        #: consults the ``executor`` site before handing each round to
+        #: the thread pool — an injected death is recovered by retrying
+        #: the round (the engine never started it). Defaults to the
+        #: engine's own plan so one seed drives the whole stack.
+        self._fault_plan = (fault_plan if fault_plan is not None
+                            else getattr(engine, "fault_plan", None))
+        self.executor_faults = 0    # injected executor deaths survived
         #: optional ``async def hook(frontend)`` awaited after every
         #: engine round (post-pump). The loop does not start the next
         #: round until it returns, so a client coroutine woken by a
@@ -304,6 +330,9 @@ class AsyncFrontend:
             return
         handle._closed = True
         handle.finish_s = time.perf_counter()
+        if (handle.req is not None
+                and handle.req.state is RequestState.FAILED):
+            handle.error = handle.req.error or "request failed"
         handle._queue.put_nowait(None)          # stream sentinel
 
     def _pump(self) -> None:
@@ -336,6 +365,16 @@ class AsyncFrontend:
                 self._apply_cancels()
                 self._transfer_intake()
                 if eng.queue or eng.active or eng._cancel_pending:
+                    if self._fault_plan is not None:
+                        try:
+                            self._fault_plan.executor()
+                        except InjectedFault:
+                            # executor death before the step started:
+                            # the engine never ran, so recovery is a
+                            # plain retry of the round
+                            self.executor_faults += 1
+                            await asyncio.sleep(0)
+                            continue
                     await loop.run_in_executor(None, eng.step)
                     self.rounds += 1
                     self._pump()
@@ -369,5 +408,6 @@ class AsyncFrontend:
             "frontend_rounds": float(self.rounds),
             "frontend_pending": float(self.pending),
             "frontend_live": float(len(self._live)),
+            "frontend_executor_faults": float(self.executor_faults),
         })
         return out

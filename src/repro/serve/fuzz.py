@@ -33,11 +33,13 @@ Invariants audited (the declared properties, per round):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.kv_pages import PagePool
 from repro.serve.prefix_cache import PrefixCache, cache_key_suffix
 
@@ -221,7 +223,8 @@ class PoolFuzzHarness:
 
     def __init__(self, seed: int, *, num_pages: int = 64,
                  page_size: int = 4, vocab: int = 40,
-                 cache: bool = True, watermark_pages: int = 4):
+                 cache: bool = True, watermark_pages: int = 4,
+                 faults: Optional[FaultPlan] = None):
         self.rng = np.random.default_rng(seed)
         self.page_size = page_size
         self.vocab = vocab
@@ -229,6 +232,15 @@ class PoolFuzzHarness:
         self.cache = (PrefixCache(page_size, self.pool)
                       if cache else None)
         self.watermark = watermark_pages
+        #: deterministic mid-batch fault injection (DESIGN.md §15): the
+        #: plan's ``alloc_hook`` fires inside the allocator's critical
+        #: section; every abort must roll back atomically and the
+        #: harness's invariants must keep holding — the chaos half of
+        #: the fuzz suite
+        self.faults = faults
+        if faults is not None:
+            self.pool.fault_hook = faults.alloc_hook
+        self.aborts_recovered = 0
         self.slots: Dict[int, _SimSlot] = {}
         self.admit_order: List[int] = []       # rids in admission order
         self._retired_streams: List[np.ndarray] = []
@@ -240,6 +252,24 @@ class PoolFuzzHarness:
     # ------------------------------------------------------------- admission
     def _pages_for(self, tokens: int) -> int:
         return self.pool.pages_for(tokens)
+
+    def _suspended(self):
+        return (self.faults.suspended() if self.faults is not None
+                else contextlib.nullcontext())
+
+    def _free_safe(self, groups) -> None:
+        """``free_batch`` that recovers from an injected mid-batch
+        abort: the undo log rolled it back, so the retry (injection
+        suspended) applies the frees cleanly. Planned cache evictions
+        MUST land this way — the trie already forgot those pages."""
+        if not groups:
+            return
+        try:
+            self.pool.free_batch(groups)
+        except InjectedFault:
+            self.aborts_recovered += 1
+            with self._suspended():
+                self.pool.free_batch(groups)
 
     def _make_prompt(self) -> np.ndarray:
         """Prompts drawn to collide: with probability ~1/2 extend a
@@ -296,14 +326,24 @@ class PoolFuzzHarness:
         if need_now > free_after:
             # cannot admit: planned evictions still MUST land
             if evict_groups:
-                self.pool.free_batch(evict_groups)
+                self._free_safe(evict_groups)
             return False
         rid = self.next_rid
         self.next_rid += 1
-        ids = self.pool.alloc_batch(
-            [need_now], [rid],
-            incref_groups=[sh_ids] if n_sh else None,
-            decref_groups=evict_groups or None)[0]
+        try:
+            ids = self.pool.alloc_batch(
+                [need_now], [rid],
+                incref_groups=[sh_ids] if n_sh else None,
+                decref_groups=evict_groups or None)[0]
+        except InjectedFault:
+            # aborted mid-batch: the undo log rolled the grant, the
+            # adoption increfs, AND the eviction decrefs back. The
+            # admission simply fails this round; the evictions are
+            # re-applied under suspended injection.
+            self.aborts_recovered += 1
+            self.pool.check()
+            self._free_safe(evict_groups)
+            return False
         pages = ([] if sh_ids is None else
                  [int(p) for p in sh_ids]) + [int(p) for p in ids]
         self.slots[rid] = _SimSlot(
@@ -331,9 +371,18 @@ class PoolFuzzHarness:
                     and self.pool.n_free < len(grow_counts) + self.watermark):
                 evict_groups, _ = self.cache.evict_plan(
                     len(grow_counts) + self.watermark - self.pool.n_free)
-            grants = self.pool.alloc_batch(
-                grow_counts, [("grow", r) for r in grow_rids], partial=True,
-                decref_groups=evict_groups or None)
+            try:
+                grants = self.pool.alloc_batch(
+                    grow_counts, [("grow", r) for r in grow_rids],
+                    partial=True, decref_groups=evict_groups or None)
+            except InjectedFault:
+                # aborted mid-batch: no slot grows this round (their
+                # writes stall exactly like an engine pause); the
+                # planned evictions still land
+                self.aborts_recovered += 1
+                self.pool.check()
+                self._free_safe(evict_groups)
+                grants = [None] * len(grow_counts)
             for rid, ids in zip(grow_rids, grants):
                 if ids is not None:
                     s = self.slots[rid]
@@ -385,7 +434,7 @@ class PoolFuzzHarness:
             if held.size:
                 groups.append(held)
         if groups:
-            self.pool.free_batch(groups)
+            self._free_safe(groups)
 
     # ------------------------------------------------------------ invariants
     def check(self) -> None:
@@ -430,7 +479,7 @@ class PoolFuzzHarness:
         if self.cache is not None:
             groups = self.cache.drop_all()
             if groups:
-                self.pool.free_batch(groups)
+                self._free_safe(groups)
         assert self.pool.in_use == 0, (
             f"{self.pool.in_use} pages leaked after full drain")
         self.pool.check()

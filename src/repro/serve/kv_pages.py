@@ -149,7 +149,8 @@ class PagePool:
     def __init__(self, num_pages: int, page_size: int, *,
                  sync: Optional[SyncLibrary] = None,
                  expected_contention: float = 0.25,
-                 wait_mode: Optional[str] = None):
+                 wait_mode: Optional[str] = None,
+                 watchdog_s: Optional[float] = None):
         if num_pages < 1 or page_size < 1:
             raise ValueError("num_pages and page_size must be >= 1")
         if wait_mode not in (None, "auto", "adaptive", *_WAIT_MODES):
@@ -187,6 +188,17 @@ class PagePool:
         self.decrefs = 0         # references dropped (>= pages_freed)
         self.peak_in_use = 0
         self.grant_log: List[Any] = []
+        # Fault surface (DESIGN.md §15): ``fault_hook(stage)`` is called
+        # at named points *inside* the critical section; it may raise
+        # (an injected mid-batch fault — the undo log rolls the batch
+        # back atomically and re-raises) or stall (a stuck holder — the
+        # mutex watchdog flags the over-threshold hold). None = no-op.
+        self.fault_hook: Optional[Any] = None
+        self.aborted_batches = 0
+        if watchdog_s is not None:
+            wd = getattr(self.mutex, "set_watchdog", None)
+            if wd is not None:
+                wd(watchdog_s)
 
     # ----------------------------------------------------------------- state
     @property
@@ -337,38 +349,94 @@ class PagePool:
                 raise PagePoolExhausted(
                     f"need {sum(counts)} pages, {len(self._free)} free of "
                     f"{self.num_pages}")
-            # increfs land first: a rider that increfs and paired-
-            # decrefs the same page nets out instead of transiently
-            # freeing it under its new reader
-            for g in inc:
-                self._refcount[g] += 1
-                self.increfs += int(g.size)
-            # eviction decrefs land before the grants: the pages they
-            # return to the FIFO tail are available to this very batch
-            if dec:
-                self._decref_groups(dec, count_frees=True)
-            starved = False
-            granted_decrefs = []
-            for i, (n, tag) in enumerate(zip(counts, tags)):
-                if starved or n > len(self._free):
-                    starved = True          # FIFO prefix only
-                    out.append(None)
-                    continue
-                ids = np.asarray([self._free.popleft() for _ in range(n)],
-                                 np.int32)
-                self._allocated[ids] = True
-                self._refcount[ids] = 1
-                self._epoch[ids] += 1
-                self.allocs += 1
-                self.pages_alloced += n
-                self.grant_log.append(tag)
-                out.append(ids)
-                if paired is not None and paired[i] is not None:
-                    granted_decrefs.append(paired[i])
-            if granted_decrefs:
-                self._decref_groups(granted_decrefs, count_frees=False)
+            # mutation phase — journaled so an injected mid-batch fault
+            # (fault_hook raising at any stage) rolls everything applied
+            # so far back in reverse and re-raises with the pool exactly
+            # as it was: the undo-log extension of the validate-first
+            # atomic-failure contract (DESIGN.md §15)
+            undo: List[Any] = []
+            try:
+                self._fire("alloc:validated")
+                # increfs land first: a rider that increfs and paired-
+                # decrefs the same page nets out instead of transiently
+                # freeing it under its new reader
+                for g in inc:
+                    self._refcount[g] += 1
+                    self.increfs += int(g.size)
+                    undo.append(self._undo_incref(g))
+                self._fire("alloc:increfs")
+                # eviction decrefs land before the grants: the pages
+                # they return to the FIFO tail are available to this
+                # very batch
+                if dec:
+                    self._decref_groups(dec, count_frees=True, undo=undo)
+                self._fire("alloc:evict_decrefs")
+                starved = False
+                granted_decrefs = []
+                for i, (n, tag) in enumerate(zip(counts, tags)):
+                    if starved or n > len(self._free):
+                        starved = True          # FIFO prefix only
+                        out.append(None)
+                        continue
+                    ids = np.asarray(
+                        [self._free.popleft() for _ in range(n)], np.int32)
+                    self._allocated[ids] = True
+                    self._refcount[ids] = 1
+                    self._epoch[ids] += 1
+                    self.allocs += 1
+                    self.pages_alloced += n
+                    self.grant_log.append(tag)
+                    out.append(ids)
+                    undo.append(self._undo_grant(ids, n))
+                    if paired is not None and paired[i] is not None:
+                        granted_decrefs.append(paired[i])
+                    self._fire("alloc:grant")
+                if granted_decrefs:
+                    self._decref_groups(granted_decrefs, count_frees=False,
+                                        undo=undo)
+                self._fire("alloc:paired_decrefs")
+            except BaseException:
+                self._rollback(undo)
+                raise
             self.peak_in_use = max(self.peak_in_use, self.in_use)
         return out
+
+    # ------------------------------------------------------ fault injection
+    def _fire(self, stage: str) -> None:
+        """(Lock held.) Give the installed fault hook a shot at this
+        mutation stage — it may raise (abort + rollback) or stall (the
+        watchdog's stuck-holder case)."""
+        if self.fault_hook is not None:
+            self.fault_hook(stage)
+
+    def _undo_incref(self, g: np.ndarray):
+        def _undo():
+            self._refcount[g] -= 1
+            self.increfs -= int(g.size)
+        return _undo
+
+    def _undo_grant(self, ids: np.ndarray, n: int):
+        def _undo():
+            self.grant_log.pop()
+            self.allocs -= 1
+            self.pages_alloced -= n
+            self._refcount[ids] = 0
+            self._allocated[ids] = False
+            self._epoch[ids] -= 1
+            # the grant popped the free-list head; push back in reverse
+            # so the FIFO order (and every later batch's grants) is
+            # byte-identical to a never-faulted pool
+            for p in reversed(ids.tolist()):
+                self._free.appendleft(int(p))
+        return _undo
+
+    def _rollback(self, undo: List[Any]) -> None:
+        """(Lock held.) Reverse every journaled mutation, newest first,
+        and count the aborted batch. ``check()`` must pass afterwards —
+        the transactional contract the fuzz suite audits."""
+        for fn in reversed(undo):
+            fn()
+        self.aborted_batches += 1
 
     def alloc(self, n: int, tag: Any = None) -> np.ndarray:
         """Claim ``n`` pages (FIFO reuse order) — a batch of one. Raises
@@ -390,11 +458,14 @@ class PagePool:
                     f"an unallocated page would alias the next grant")
 
     def _decref_groups(self, groups: List[np.ndarray],
-                       count_frees: bool) -> List[int]:
+                       count_frees: bool,
+                       undo: Optional[List[Any]] = None) -> List[int]:
         """(Lock held.) Validate then apply a batch of decrefs; pages
         whose count hits zero return to the FIFO free-list tail in group
         order. Validation is atomic across the whole batch: every page's
-        total occurrences must not exceed its refcount."""
+        total occurrences must not exceed its refcount. When ``undo`` is
+        given, a closure reversing the whole application is appended to
+        it (the transactional-batch journal)."""
         occ: Dict[int, int] = {}
         for g in groups:
             for i in g.tolist():
@@ -415,12 +486,15 @@ class PagePool:
                         f"reference(s) — the extra decref would free a "
                         f"page someone still reads")
         freed: List[int] = []
+        applied: List[Tuple[int, bool]] = []   # (page, hit zero) in order
         for g in groups:
             n_freed = 0
             for i in g.tolist():
                 self._refcount[i] -= 1
                 self.decrefs += 1
-                if self._refcount[i] == 0:
+                went_free = self._refcount[i] == 0
+                applied.append((i, went_free))
+                if went_free:
                     self._allocated[i] = False
                     self._free.append(i)
                     freed.append(i)
@@ -428,6 +502,21 @@ class PagePool:
             if count_frees:
                 self.frees += 1
             self.pages_freed += n_freed
+        if undo is not None:
+            n_groups, n_freed_total = len(groups), len(freed)
+
+            def _undo():
+                for i, went_free in reversed(applied):
+                    if went_free:
+                        back = self._free.pop()   # appended at the tail
+                        assert back == i, "undo log out of sync"
+                        self._allocated[i] = True
+                    self._refcount[i] += 1
+                    self.decrefs -= 1
+                if count_frees:
+                    self.frees -= n_groups
+                self.pages_freed -= n_freed_total
+            undo.append(_undo)
         return freed
 
     def incref_batch(self, groups: Sequence) -> None:
@@ -442,9 +531,16 @@ class PagePool:
         with self.mutex:
             for g in groups:
                 self._check_incref(g)
-            for g in groups:
-                self._refcount[g] += 1
-                self.increfs += int(g.size)
+            undo: List[Any] = []
+            try:
+                for g in groups:
+                    self._refcount[g] += 1
+                    self.increfs += int(g.size)
+                    undo.append(self._undo_incref(g))
+                self._fire("incref:applied")
+            except BaseException:
+                self._rollback(undo)
+                raise
 
     def free_batch(self, groups: Sequence) -> List[int]:
         """Drop one reference per listed page under ONE critical section;
@@ -462,7 +558,16 @@ class PagePool:
         """
         groups = [np.asarray(g, np.int32).reshape(-1) for g in groups]
         with self.mutex:
-            return self._decref_groups(groups, count_frees=True)
+            undo: List[Any] = []
+            try:
+                self._fire("free:enter")
+                freed = self._decref_groups(groups, count_frees=True,
+                                            undo=undo)
+                self._fire("free:decrefs")
+            except BaseException:
+                self._rollback(undo)
+                raise
+            return freed
 
     def free(self, ids) -> List[int]:
         """Drop one reference per page — a batch of one; returns the
@@ -519,6 +624,7 @@ class PagePool:
         self.pages_freed = 0
         self.increfs = 0
         self.decrefs = 0
+        self.aborted_batches = 0
         self.peak_in_use = self.in_use
         self.grant_log.clear()
         fn = getattr(self.mutex, "reset_stats", None)
@@ -708,7 +814,8 @@ class PagedSlotPool:
                  max_pages_per_slot: Optional[int] = None,
                  sync: Optional[SyncLibrary] = None,
                  expected_contention: float = 0.25,
-                 wait_mode: Optional[str] = None):
+                 wait_mode: Optional[str] = None,
+                 watchdog_s: Optional[float] = None):
         if capacity < 1:
             raise ValueError("slot pool capacity must be >= 1")
         self.capacity = capacity
@@ -718,7 +825,8 @@ class PagedSlotPool:
             num_pages = -(-capacity * max_len // page_size)
         self.pages = PagePool(num_pages, page_size, sync=sync,
                               expected_contention=expected_contention,
-                              wait_mode=wait_mode)
+                              wait_mode=wait_mode,
+                              watchdog_s=watchdog_s)
         if max_pages_per_slot is None:
             max_pages_per_slot = -(-2 * max_len // page_size)
         self.max_pages_per_slot = min(max_pages_per_slot, num_pages)

@@ -27,11 +27,13 @@ from repro.sync.backends import (  # noqa: F401
 from repro.sync.library import (  # noqa: F401
     HOST_NOMINAL,
     SyncLibrary,
+    SyncTimeoutError,
     classified_host,
 )
 from repro.sync.protocols import (  # noqa: F401
     Barrier,
     BarrierPlan,
+    BoundedMutexPlan,
     Mutex,
     MutexPlan,
     Semaphore,

@@ -41,7 +41,45 @@ from repro.core.abstraction import (
 )
 
 from .backends import SyncBackend, get_backend
-from .protocols import BarrierPlan, MutexPlan, SemaphorePlan
+from .protocols import (
+    BarrierPlan,
+    BoundedMutexPlan,
+    MutexPlan,
+    SemaphorePlan,
+)
+
+
+class SyncTimeoutError(TimeoutError):
+    """A bounded acquire exhausted its wait budget (DESIGN.md §15).
+
+    Raised by :meth:`SyncLibrary.acquire` when the primitive's boolean
+    ``timeout=`` form returns False. The primitive is *not* held: every
+    host implementation leaves itself consistent on timeout (the ticket
+    mutex burns its ticket, the sleeping semaphore rolls its count
+    back), so the caller may retry, back off, or fail the enclosing
+    operation without any cleanup."""
+
+    def __init__(self, primitive: object, timeout_s: Optional[float],
+                 what: str = ""):
+        self.primitive = primitive
+        self.timeout_s = timeout_s
+        name = type(primitive).__name__
+        super().__init__(
+            f"{what or name}: not acquired within "
+            f"{timeout_s if timeout_s is not None else 'inf'}s "
+            f"({name})")
+
+
+def _bounded_acquire(prim, timeout: Optional[float]) -> bool:
+    """One bounded acquire on any live primitive: mutexes expose
+    ``lock(timeout=)``, semaphores ``wait(timeout=)`` — both return
+    False on expiry and leave the primitive consistent."""
+    if hasattr(prim, "lock"):
+        return bool(prim.lock(timeout=timeout))
+    if hasattr(prim, "wait"):
+        return bool(prim.wait(timeout=timeout))
+    raise TypeError(f"{type(prim).__name__} has no bounded acquire form "
+                    "(expected .lock or .wait)")
 
 # A nominal host abstraction for when probing is not worth it (serving
 # constructors on the hot path). Classifies as "balanced" — fa mutex,
@@ -162,6 +200,27 @@ class SyncLibrary:
         return self._backend().barrier(parties, kind,
                                        self.strategy or c.strategy)
 
+    # --------------------------------------------------------- bounded waits
+    @staticmethod
+    def acquire(prim, timeout: Optional[float] = None,
+                what: str = "") -> None:
+        """Acquire a live mutex/semaphore, raising
+        :class:`SyncTimeoutError` if ``timeout`` (seconds) expires — the
+        exception-typed form of the primitives' boolean ``timeout=``
+        protocol. ``timeout=None`` waits unboundedly (never raises)."""
+        if not _bounded_acquire(prim, timeout):
+            raise SyncTimeoutError(prim, timeout, what)
+
+    @staticmethod
+    def try_acquire(prim) -> bool:
+        """Non-blocking-intent acquire: a zero-budget bounded acquire.
+        True iff the primitive was taken immediately. Note the FIFO
+        ticket mutex's timeout discipline still *burns a ticket* on
+        failure (it briefly waits for its turn so later tickets never
+        deadlock) — bounded, but up to one holder's critical section,
+        not strictly O(1)."""
+        return _bounded_acquire(prim, 0.0)
+
     # ------------------------------------------------------------- plan form
     def plan_semaphore(self, arrivals, holds, capacity: int, *,
                        backend: Optional[str] = None,
@@ -203,6 +262,60 @@ class SyncLibrary:
         return MutexPlan(arrival=arrival, grant_order=np.asarray(g),
                          turn_trace=np.asarray(t), acc=float(acc),
                          backend=bk.name)
+
+    def plan_mutex_bounded(self, arrivals, holds, timeouts, *,
+                           backend: Optional[str] = None,
+                           window: Optional[int] = None
+                           ) -> BoundedMutexPlan:
+        """Bounded-wait FIFO mutex timeline: the plan form of
+        ``lock(timeout=)`` (DESIGN.md §15).
+
+        Each requester carries a wait budget in ``timeouts`` (np.inf =
+        unbounded). A requester whose turn would arrive after its budget
+        burns its ticket — it is never granted and holds for zero time,
+        exactly the live ``TicketMutex`` discipline. Burned tickets
+        shorten every later wait, so the timeline is computed as a fixed
+        point: replan the capacity-1 semaphore timeline (a mutex *is*
+        the capacity-1 case, and the semaphore plan is the one form
+        every backend reports per-requester grant times for) with
+        burned holds zeroed until the burned set stabilizes. Decisions
+        fix in FIFO-prefix order, so at most N+1 replans are needed —
+        in practice 2–3.
+
+        The ``granted`` mask is the cross-backend equivalence object:
+        host (observed execution), kernel, and ref must agree with the
+        step-exact numpy oracle
+        (``kernels.ticket_lock.ops.ticket_lock_bounded_oracle``)."""
+        arrivals = np.asarray(arrivals, np.float32)
+        holds = np.asarray(holds, np.float32)
+        timeouts = np.asarray(timeouts, np.float32)
+        n = arrivals.shape[0]
+        if holds.shape != arrivals.shape or timeouts.shape != arrivals.shape:
+            raise ValueError("arrivals/holds/timeouts must align")
+        granted = np.ones(n, bool)
+        live = holds.copy()
+        plan = None
+        iterations = 0
+        for _ in range(n + 2):
+            plan = self.plan_semaphore(arrivals, live, 1, backend=backend,
+                                       window=window)
+            iterations += 1
+            # equality is "granted": the live mutex times out only when
+            # the deadline strictly passes (small tolerance for the
+            # float32 event clocks)
+            now = (plan.grant - arrivals) <= timeouts + 1e-4
+            if np.array_equal(now, granted):
+                break
+            granted = now
+            live = np.where(granted, holds, 0.0).astype(np.float32)
+        else:
+            raise RuntimeError("bounded mutex plan did not stabilize")
+        return BoundedMutexPlan(
+            arrivals=arrivals, holds=holds, timeouts=timeouts,
+            grant=np.asarray(plan.grant),
+            release=np.asarray(plan.release),
+            granted=granted, backend=plan.backend,
+            iterations=iterations)
 
     def plan_barrier(self, present, required=None, *, epoch: int = 1,
                      flags=None, max_polls: int = 1024,

@@ -109,6 +109,38 @@ class MutexPlan:
 
 
 @dataclasses.dataclass
+class BoundedMutexPlan:
+    """FIFO ticket-mutex timeline where every requester carries a wait
+    *budget* — the plan form of ``lock(timeout=)`` (DESIGN.md §15).
+
+    A requester whose turn arrives after its budget expires *burns its
+    ticket*: it is never granted, holds for zero time, and passes the
+    turn on (the live ``TicketMutex`` timeout discipline). Because a
+    burned ticket shortens every later wait, the timeline is the fixed
+    point of replanning with burned holds zeroed; backends reach the
+    same fixed point, so ``granted`` is the cross-backend equivalence
+    object the bounded-wait tests pin.
+    """
+
+    arrivals: np.ndarray   # [N] request arrival times
+    holds: np.ndarray      # [N] critical-section lengths as requested
+    timeouts: np.ndarray   # [N] wait budgets (np.inf = unbounded)
+    grant: np.ndarray      # [N] turn times (granted or burned at this time)
+    release: np.ndarray    # [N] grant + hold (granted) or grant (burned)
+    granted: np.ndarray    # [N] bool: True = acquired, False = timed out
+    backend: str = ""
+    iterations: int = 1    # replans until the burned set stabilized
+
+    @property
+    def timed_out(self) -> np.ndarray:
+        return np.flatnonzero(~np.asarray(self.granted))
+
+    @property
+    def wait_times(self) -> np.ndarray:
+        return self.grant - self.arrivals
+
+
+@dataclasses.dataclass
 class BarrierPlan:
     """One XF-barrier epoch over flag words.
 

@@ -18,8 +18,9 @@ except ImportError:
 from repro.core.abstraction import (FERMI, TESLA, TPU_V5E, PrimitiveKind,
                                     select_backend, select_impl)
 from repro.core.hostsync import SleepingSemaphore, SpinSemaphore, XFBarrier
-from repro.sync import (SyncBackend, SyncLibrary, WindowedPlanner,
-                        available_backends, get_backend, register_backend)
+from repro.sync import (SyncBackend, SyncLibrary, SyncTimeoutError,
+                        WindowedPlanner, available_backends, get_backend,
+                        register_backend)
 from repro.sync import library as sync_library
 
 BACKENDS = ("host", "kernel", "ref")
@@ -319,6 +320,104 @@ def test_barrier_plans_equivalent_across_backends(lib, n, seed):
         np.testing.assert_array_equal(
             plan.straggler_ranks,
             np.flatnonzero((required > 0) & (present == 0)), err_msg=be)
+
+
+# ------------------------------------------------- bounded waits (§15)
+def test_live_mutex_timeout_burns_ticket_and_recovers(lib):
+    """``SyncLibrary.acquire(timeout=)`` raises a typed error when the
+    budget expires, and the burned ticket leaves the mutex consistent:
+    the FIFO turn passes on and the lock is takeable again."""
+    import threading
+    import time
+
+    m = lib.mutex(kind="ticket")
+    assert SyncLibrary.try_acquire(m)        # uncontended: granted at once
+    m.unlock()
+
+    m.lock()
+    res = {}
+
+    def waiter():
+        try:
+            SyncLibrary.acquire(m, timeout=0.01, what="waiter")
+            res["r"] = "acquired"
+            m.unlock()
+        except SyncTimeoutError as e:
+            res["r"] = "timeout"
+            res["e"] = e
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)          # budget expires while we still hold
+    m.unlock()                # burned-ticket discipline: the waiter
+    t.join()                  # takes its turn, passes it on, reports F
+    assert res["r"] == "timeout"
+    assert res["e"].timeout_s == 0.01
+    assert isinstance(res["e"], TimeoutError)
+    # the turn was passed on, not wedged: the mutex is free again
+    assert SyncLibrary.try_acquire(m)
+    m.unlock()
+    # unbounded form never raises
+    SyncLibrary.acquire(m)
+    m.unlock()
+
+
+def test_live_semaphore_timeout_rolls_count_back(lib):
+    """A timed-out semaphore wait must roll its count back — the slot it
+    briefly claimed stays available to the next acquirer."""
+    import threading
+    import time
+
+    sem = lib.semaphore(1)
+    SyncLibrary.acquire(sem)                 # hold the only slot
+    res = {}
+
+    def waiter():
+        res["ok"] = SyncLibrary.try_acquire(sem)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.02)
+    sem.post()                # deliver the turn; expired waiter rolls back
+    t.join()
+    assert res["ok"] is False
+    SyncLibrary.acquire(sem, timeout=1.0)    # rolled-back slot still there
+    sem.post()
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(3, 10), seed=st.integers(0, 10_000))
+def test_bounded_mutex_plans_match_oracle_across_backends(lib, n, seed):
+    """Property: the bounded-wait mutex timeline — who acquired, who
+    burned its ticket, the shared turn clock — agrees with the
+    step-exact numpy oracle on host (observed execution), kernel, and
+    ref alike."""
+    from repro.kernels.ticket_lock.ops import ticket_lock_bounded_oracle
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.sort(rng.uniform(0, 2, n)).astype(np.float32)
+    holds = rng.uniform(0.5, 1.5, n).astype(np.float32)
+    timeouts = rng.choice(
+        [0.0, 0.7, 2.5, np.inf], size=n).astype(np.float32)
+    g_ref, grant_ref, rel_ref = ticket_lock_bounded_oracle(
+        arrivals, holds, timeouts)
+    assert g_ref.any()                        # trace exercises both fates
+    for be in BACKENDS:
+        plan = lib.plan_mutex_bounded(arrivals, holds, timeouts,
+                                      backend=be)
+        np.testing.assert_array_equal(plan.granted, g_ref, err_msg=be)
+        np.testing.assert_allclose(plan.grant, grant_ref, rtol=1e-4,
+                                   atol=1e-3, err_msg=be)
+        np.testing.assert_allclose(plan.release, rel_ref, rtol=1e-4,
+                                   atol=1e-3, err_msg=be)
+        assert 1 <= plan.iterations <= n + 2
+        np.testing.assert_array_equal(
+            plan.timed_out, np.flatnonzero(~g_ref), err_msg=be)
+    # all-unbounded degenerates to the plain FIFO mutex timeline
+    free = lib.plan_mutex_bounded(arrivals, holds,
+                                  np.full(n, np.inf, np.float32),
+                                  backend="ref")
+    assert free.granted.all()
 
 
 # ----------------------------------------------------- serve-stack injection

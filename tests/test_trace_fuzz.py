@@ -165,3 +165,26 @@ def test_engine_trace_fuzz_nightly_sweep(lm_setup):
         off, on, _ = _run_trace_pair(model, params, seed,
                                      vocab=cfg.vocab_size)
         _assert_streams_match(off, on)
+
+
+@pytest.mark.slow
+def test_pool_fuzz_fault_injection_nightly_sweep():
+    """The §15 nightly chaos sweep: ``N_POOL_TRACES`` seeded lifecycle
+    traces with allocator faults injected mid-batch. Every abort must
+    roll back cleanly (invariants audited each round) and every arena
+    must drain empty; across the sweep faults actually fire and are
+    recovered."""
+    from repro.serve.faults import FaultPlan
+
+    injected = recovered = 0
+    for seed in range(N_POOL_TRACES):
+        fp = FaultPlan(seed, alloc_rate=0.08,
+                       stuck_rate=0.01, stuck_hold_s=0.0)
+        h = PoolFuzzHarness(seed, num_pages=48, page_size=4,
+                            cache=bool(seed % 2), faults=fp)
+        h.run(rounds=30)
+        assert h.pool.in_use == 0
+        injected += fp.injected
+        recovered += h.aborts_recovered
+    assert injected > 0
+    assert recovered > 0
