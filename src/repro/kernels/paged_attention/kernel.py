@@ -1,0 +1,149 @@
+"""Fused paged-decode attention as a Pallas TPU kernel.
+
+The gather-then-attend path (models/attention.py::paged_decode_attention)
+materializes every gathered page in HBM — one full pass to build the
+[B, P*ps, KV, hd] contiguous view, a second for attention to read it
+back. The paper's principle is to minimize slow memory-system round
+trips per operation; flashinfer's ``BatchDecodeWithPagedKVCacheWrapper``
+(SNIPPETS.md #1) shows the production shape: one kernel that walks the
+block table ``(page_indices, last_page_len)`` per head and computes
+attention in a single pass, so each page of K/V crosses HBM exactly
+once.
+
+Walk order (DESIGN.md §16): grid ``(B, KV)`` — one program per
+(row, kv-head). Each program holds the row's ``G = H // KV`` query
+vectors for its kv head (the kv-major grouping ``expand_kv`` defines:
+query head ``h`` reads kv head ``h // G``, so ``q.reshape(B, KV, G,
+hd)`` lines the group up with one arena head slice) and walks the
+row's block-table entries in flat position order — page ``j`` covers
+positions ``[j*ps, (j+1)*ps)`` — accumulating online softmax
+``(m, l, acc)`` per query head. GQA is what makes the fusion pay: all
+``G`` queries of a group score against one page load.
+
+Sentinel handling: a table entry ``>= num_pages`` is unallocated (or
+masked for the round by the engine — paused rows under a starved CoW
+split, kv_pages.masked_table). The gather reference *clips* such
+entries to the last page and relies on the ``pos < len`` mask to hide
+the garbage; this kernel masks the whole page explicitly, so a
+fully-sentinel row (every page masked) accumulates ``l == 0`` and
+emits exact zeros — paused/frozen slots contribute nothing, and never
+read another row's pages.
+
+Numerical shape: scores and the softmax accumulate in float32
+regardless of arena dtype; masked lanes are excluded from ``p`` by a
+``where`` (not just a ``NEG_INF`` score: when every lane of a page is
+masked the running max stays at the ``NEG_INF`` sentinel and
+``exp(NEG_INF - NEG_INF) == 1`` would leak weight). The final
+division guards ``l == 0`` so all-masked rows divide safely.
+
+Interpret tier (``interpret=True``) is the CI-gated correctness
+surface — the differential suite pins this kernel to the gather
+reference on CPU before any hardware run. On TPU hardware, tile
+alignment (hd and ps to the 128-lane layout) is the one expected
+change; the walk itself is already page-at-a-time sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+NEG_INF = -2.0e38  # matches models/attention.py's masking sentinel
+
+
+def paged_decode_kernel(
+    pages_ref,    # (1, P) i32: this row's block table
+    len_ref,      # (1, 1) i32: this row's cache length (positions to attend)
+    q_ref,        # (1, 1, G, hd): the kv-head group's query block
+    k_ref,        # (num_pages, ps, 1, hd): K arena, this kv head
+    v_ref,        # (num_pages, ps, 1, hd): V arena, this kv head
+    o_ref,        # out (1, 1, G, hd)
+    *,
+    num_pages: int,
+    page_size: int,
+    window: Optional[int],
+    scale: float,
+):
+    table_len = pages_ref.shape[1]
+    g, hd = q_ref.shape[2], q_ref.shape[3]
+    length = len_ref[0, 0]
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [G, hd]
+
+    def body(j, carry):
+        m, l, acc = carry
+        page = pages_ref[0, j]
+        live = page < num_pages                   # sentinel page -> all masked
+        pid = jnp.clip(page, 0, num_pages - 1)
+        k = k_ref[pid, :, 0, :].astype(jnp.float32)          # [ps, hd]
+        v = v_ref[pid, :, 0, :].astype(jnp.float32)
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)                    # [1, ps]
+        ok = live & (pos < length)
+        if window is not None:
+            ok = ok & (pos >= length - window)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [G, ps]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # exclude masked lanes explicitly: with m_new still at NEG_INF,
+        # exp(NEG_INF - NEG_INF) == 1 would weight a masked lane
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    acc0 = jnp.zeros((g, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, table_len, body, (m0, l0, acc0))
+    # all-masked rows (fully sentinel table / length 0) have l == 0 and
+    # emit exact zeros — they contribute nothing downstream
+    out = acc / jnp.maximum(l, 1e-37)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def fused_paged_decode(
+    q: jax.Array,          # [B, KV, G, hd] kv-major grouped queries
+    k_arena: jax.Array,    # [num_pages, ps, KV, hd]
+    v_arena: jax.Array,    # [num_pages, ps, KV, hd]
+    pages: jax.Array,      # [B, P] i32 block tables (sentinel = num_pages)
+    cache_len: jax.Array,  # [B] i32 per-row lengths
+    *,
+    window: Optional[int] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """One-pass block-table decode attention. Returns [B, KV, G, hd]."""
+    b, kv, g, hd = q.shape
+    num_pages, ps = k_arena.shape[0], k_arena.shape[1]
+    p_cap = pages.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        paged_decode_kernel, num_pages=num_pages, page_size=ps,
+        window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv),
+        in_specs=[
+            pl.BlockSpec((1, p_cap), lambda i, h: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, h: (i, 0)),
+            pl.BlockSpec((1, 1, g, hd), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((num_pages, ps, 1, hd), lambda i, h: (0, 0, h, 0)),
+            pl.BlockSpec((num_pages, ps, 1, hd), lambda i, h: (0, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, h: (i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), cache_len.astype(jnp.int32).reshape(b, 1),
+      q, k_arena, v_arena)

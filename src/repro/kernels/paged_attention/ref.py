@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the fused paged-decode kernel.
+
+Deliberately self-contained (no import of ``models.attention``, which
+imports this package's ops): the same gather-then-attend math the model
+layer runs, restated in the kernel's [B, KV, G, hd] grouping so the
+differential suite has two *independent* derivations to compare. One
+semantic difference is intentional and documented: rows whose table is
+fully sentinel-masked produce garbage under the clipping gather (the
+engine never reads those rows), while the fused kernel emits exact
+zeros — the oracle exposes ``row_live`` so tests compare only rows the
+engine would read.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def gather_pages_ref(arena: jax.Array, pages: jax.Array) -> jax.Array:
+    """[num_pages, ps, KV, hd] + [B, P] -> [B, P*ps, KV, hd], clipping
+    sentinel entries to the last page (the model layer's semantics)."""
+    num_pages = arena.shape[0]
+    g = jnp.take(arena, jnp.clip(pages, 0, num_pages - 1), axis=0)
+    b, p_cap, ps = g.shape[:3]
+    return g.reshape((b, p_cap * ps) + g.shape[3:])
+
+
+def paged_decode_ref(
+    q: jax.Array,          # [B, KV, G, hd]
+    k_arena: jax.Array,    # [num_pages, ps, KV, hd]
+    v_arena: jax.Array,    # [num_pages, ps, KV, hd]
+    pages: jax.Array,      # [B, P] i32
+    cache_len: jax.Array,  # [B] i32
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Gather-then-attend reference in the kernel's grouping. Masks
+    sentinel *pages* (not just positions) like the kernel does, and
+    zeroes all-masked rows, so it is bit-comparable on every row."""
+    b, kv, g, hd = q.shape
+    num_pages, ps = k_arena.shape[0], k_arena.shape[1]
+    p_cap = pages.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    kb = gather_pages_ref(k_arena, pages)        # [B, T, KV, hd]
+    vb = gather_pages_ref(v_arena, pages)
+    t = p_cap * ps
+    pos = jnp.arange(t)
+    valid = pos[None, :] < cache_len[:, None]                   # [B, T]
+    if window is not None:
+        valid &= pos[None, :] >= cache_len[:, None] - window
+    page_live = (pages < num_pages)                             # [B, P]
+    valid &= jnp.repeat(page_live, ps, axis=1)
+
+    sc = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32) * scale,
+                    kb.astype(jnp.float32))
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(sc - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, vb.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-37)
+    return out.astype(q.dtype)
+
+
+def row_live(pages: jax.Array, num_pages: int) -> jax.Array:
+    """[B] bool: rows with at least one real (non-sentinel) page — the
+    rows the engine actually reads; all others emit zeros from the
+    kernel and garbage from the clipping gather."""
+    return jnp.any(pages < num_pages, axis=1)

@@ -109,6 +109,8 @@ def make_engine(model, params, args, sync=None) -> SlotServeEngine:
         cache_watermark=args.cache_watermark,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
         round_token_budget=args.round_token_budget,
+        attention_impl=args.attention_impl,
+        bucketed_dispatch=args.bucketed_dispatch,
         fault_plan=fault_plan,
         allocator_watchdog_s=(1e-3 if fault_plan is not None else None),
         sync=sync if sync is not None else make_sync_library(args))
@@ -318,6 +320,20 @@ def main(argv=None):
                          "inside the decode dispatch instead of one "
                          "whole-prompt prefill at admission (greedy "
                          "attention archs only; DESIGN.md §12)")
+    ap.add_argument("--attention-impl", default="gather",
+                    choices=("gather", "fused"),
+                    help="paged decode read path: gather-then-attend "
+                         "(the executable reference) or the fused "
+                         "one-pass Pallas block-table kernel "
+                         "(kernels/paged_attention; interpret tier on "
+                         "CPU, compiled on TPU; DESIGN.md §16)")
+    ap.add_argument("--bucketed-dispatch", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="bucketed compiled dispatch: gather active "
+                         "slots into power-of-2 occupancy buckets so "
+                         "scheduler rounds never retrace as occupancy "
+                         "shifts (auto = on for paged greedy attention "
+                         "serving; DESIGN.md §16)")
     ap.add_argument("--round-token-budget", type=int, default=None,
                     help="per-round token budget the scheduler fills "
                          "with decode rows first, then prefill chunks "
@@ -424,6 +440,12 @@ def main(argv=None):
               f"one-shot pad fraction {st['pad_fraction']:.3f}")
     if args.kv_layout == "paged":
         pool = engine.pool
+        bd = ("on" if engine.bucketed_dispatch else "off")
+        disp = (f" ({int(st['dispatch_trace_keys'])} traced shapes, "
+                f"{int(st['dispatch_retraces'])} retraces)"
+                if engine.bucketed_dispatch else "")
+        print(f"[serve] paged attention: impl={engine.attention_impl}, "
+              f"bucketed dispatch {bd}{disp}")
         print(f"[serve] page arena: {pool.pages.num_pages} pages x "
               f"{pool.page_size} tokens, peak "
               f"{int(st['pages_peak_in_use'])} in use, "

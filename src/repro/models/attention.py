@@ -41,6 +41,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attention.ops import paged_decode_fused
 from repro.sharding.act import constrain_seq_model, current_tp
 
 from .common import spec
@@ -490,10 +491,31 @@ def cached_decode_attention(p, cfg, q, k_cache, v_cache, cache_len, *,
 
 
 def paged_decode_attention(p, cfg, q, k_arena, v_arena, pages, cache_len, *,
-                           window: Optional[int]) -> jax.Array:
-    """Block-table decode: gather each row's pages into a contiguous
-    [B, P*ps, KV, hd] view, then attend exactly as the contiguous layout
-    (same masking, same per-row length semantics)."""
+                           window: Optional[int],
+                           impl: str = "gather") -> jax.Array:
+    """Block-table decode, two executable implementations:
+
+    ``impl="gather"`` (the reference): gather each row's pages into a
+    contiguous [B, P*ps, KV, hd] view, then attend exactly as the
+    contiguous layout (same masking, same per-row length semantics).
+    Every gathered page round-trips HBM twice — once for the gather's
+    materialized view, once for attention to read it back.
+
+    ``impl="fused"``: one Pallas kernel walks the block table per
+    (row, kv-head) and computes online-softmax attention in a single
+    pass (kernels/paged_attention, DESIGN.md §16) — each page crosses
+    HBM once, GQA groups share the page load, and sentinel-masked
+    table rows contribute exactly nothing (the engine's paused/frozen
+    slots). The interpret-tier differential suite pins it to the
+    gather path; serving selects it via
+    ``SlotServeEngine(attention_impl="fused")``.
+    """
+    if impl == "fused":
+        return paged_decode_fused(q, k_arena, v_arena, pages, cache_len,
+                                  cfg.num_heads, window=window)
+    if impl != "gather":
+        raise ValueError(f"unknown paged decode impl {impl!r}; "
+                         f"expected 'gather' or 'fused'")
     kb = gather_pages(k_arena, pages)
     vb = gather_pages(v_arena, pages)
     return cached_decode_attention(p, cfg, q, kb, vb, cache_len,

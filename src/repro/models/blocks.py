@@ -66,7 +66,8 @@ def block_forward(p, x, cfg, kind: str, use_moe: bool, positions,
 
 
 def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
-                 pages=None) -> Tuple[jax.Array, Dict]:
+                 pages=None, attn_impl: str = "gather"
+                 ) -> Tuple[jax.Array, Dict]:
     """One-token pass. x [B,1,D]; cache entry as built by block_forward
     (k/v padded to max length for attention layers).
 
@@ -81,6 +82,11 @@ def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
     at flat position ``cache_len[b]``, and attention gathers the row's
     pages back into position order (kv_pages.PagedSlotPool). Mamba state
     has no time axis and stays slot-dense either way.
+
+    ``attn_impl`` selects the paged read path: ``"gather"`` (the
+    executable reference) or ``"fused"`` (one-pass Pallas block-table
+    walk, kernels/paged_attention, DESIGN.md §16). Contiguous-layout
+    decode ignores it.
     """
     cl = jnp.asarray(cache_len)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -101,7 +107,7 @@ def block_decode(p, x, cache, cache_len, cfg, kind: str, use_moe: bool,
             v_cache = attn.scatter_page_token(cache["v"], pages, cl, v[:, 0])
             y = attn.paged_decode_attention(
                 p["mixer"], cfg, q, k_cache, v_cache, pages, cl + 1,
-                window=_window_for(cfg, kind))
+                window=_window_for(cfg, kind), impl=attn_impl)
         else:
             if cl.ndim == 1:
                 rows = jnp.arange(x.shape[0])

@@ -348,14 +348,19 @@ class LM:
             new_cache["pages"] = pages
         return logits, new_cache
 
-    def decode_step(self, params, cache, token_or_embed
+    def decode_step(self, params, cache, token_or_embed, *,
+                    attn_impl: str = "gather"
                     ) -> Tuple[jax.Array, PyTree]:
         """One decode step. Returns (logits [B,V], new cache).
 
         When the cache carries a ``"pages"`` block table ([B, P] int32,
         from serve/kv_pages.PagedSlotPool) the attention layers run the
-        gather-based paged decode path; the table itself is engine-owned
-        and passes through unchanged.
+        paged decode path — ``attn_impl`` picks gather-then-attend (the
+        executable reference) or the fused one-pass Pallas block-table
+        kernel (kernels/paged_attention); the table itself is
+        engine-owned and passes through unchanged. ``attn_impl`` is a
+        trace-time constant: callers jitting this function pass a fixed
+        Python string per compiled entry.
         """
         cfg = self.cfg
         cache_len = cache["len"]
@@ -377,7 +382,7 @@ class LM:
                 x, nc = blocks.block_decode(
                     period_params[f"layer_{j}"], x,
                     period_cache[f"layer_{j}"], cache_len, cfg, kind, use_moe,
-                    pages=pages)
+                    pages=pages, attn_impl=attn_impl)
                 new_caches[f"layer_{j}"] = nc
             return x, new_caches
 
@@ -390,7 +395,7 @@ class LM:
             x, nc = blocks.block_decode(
                 params["leftover"][f"layer_{j}"], x,
                 cache["leftover"][f"layer_{j}"], cache_len, cfg, kind, use_moe,
-                pages=pages)
+                pages=pages, attn_impl=attn_impl)
             new_leftover[f"layer_{j}"] = nc
 
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)

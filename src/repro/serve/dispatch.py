@@ -1,0 +1,86 @@
+"""Bucketed compiled-dispatch cache for scheduler-round decode.
+
+hyadmin's ``DecodeRunner`` keeps a dict of pre-planned per-batch-size
+wrappers (``decode_wrappers = {B: ... for B in self.Bs}``) and picks
+the smallest that fits each round's occupancy, so changing occupancy
+never re-captures a graph. The JAX equivalent: jit a fixed-shape round
+wrapper per power-of-2 occupancy bucket — the engine gathers the
+active rows into a ``[kb]``-row view (pad lanes are inert: frozen,
+sentinel block table, dropped write positions), dispatches the bucket,
+and scatters per-row outputs back to the full ``[K]`` shape, so
+everything downstream of the dispatch is unchanged.
+
+The bucket policy is the library's one retrace-avoidance policy,
+:class:`repro.sync.window.WindowedPlanner`: smallest power-of-2 multiple
+of the base that holds the occupancy, capped at capacity. The traced
+set is bounded by ``log2(capacity) + 1`` bucket sizes (times the two
+``chunk ∈ {0, C}`` variants); this class is the ledger that proves it —
+``record_trace`` runs inside the jitted wrapper body, so it fires at
+*trace* time only, and ``retraces`` counts any trace beyond one per
+distinct static key (zero in steady state; the retrace-count property
+test and the servebench fused rows gate exactly that).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.sync.window import WindowedPlanner
+
+TraceKey = Tuple[int, ...]
+
+
+class DecodeDispatchCache:
+    """Power-of-2 occupancy buckets + the trace ledger behind them."""
+
+    def __init__(self, capacity: int, *, base: int = 1):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.planner = WindowedPlanner(
+            plan=None, pad=None, base_window=max(int(base), 1),
+            name="decode-dispatch")
+        # bucketing past the base window is this cache's design, not a
+        # planner-window overflow — silence the one-time estimate warning
+        self.planner._warned = True
+        self.traces = 0
+        self.trace_keys: Set[TraceKey] = set()
+
+    def bucket(self, n: int) -> int:
+        """Rows to dispatch for ``n`` active slots: the pow-2 bucket,
+        capped at capacity (the full-batch dispatch shape)."""
+        return min(self.capacity,
+                   self.planner.window_for(max(int(n), 1)))
+
+    def bucket_sizes(self) -> List[int]:
+        """Every bucket this capacity can produce (the bounded set a
+        warmed-up engine's jit cache holds, one trace per size)."""
+        sizes, b = [], self.bucket(1)
+        while True:
+            sizes.append(b)
+            if b >= self.capacity:
+                return sizes
+            b = self.bucket(b + 1)
+
+    def pad_rows(self, rows: Sequence[int], kb: int) -> np.ndarray:
+        """[kb] int32 slot ids, padded with ``capacity`` — an
+        out-of-range row the wrapper turns into an inert lane (frozen,
+        sentinel table) whose scatter-back drops."""
+        out = np.full(kb, self.capacity, np.int32)
+        out[: len(rows)] = np.asarray(list(rows), np.int32)
+        return out
+
+    # ------------------------------------------------------------- ledger
+    def record_trace(self, key: TraceKey) -> None:
+        """Called from inside the jitted wrapper body: runs only when
+        jax traces a new static (bucket, steps, chunk) combination."""
+        self.traces += 1
+        self.trace_keys.add(tuple(key))
+
+    @property
+    def retraces(self) -> int:
+        """Traces beyond one per distinct key — 0 means the jit cache
+        never grew after each bucket's warmup trace."""
+        return self.traces - len(self.trace_keys)

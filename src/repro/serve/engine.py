@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.dispatch import DecodeDispatchCache
 from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.kv_pages import PagedSlotPool, PrefixIndex
 from repro.serve.prefix_cache import PrefixCache, cache_key_suffix
@@ -328,6 +329,27 @@ class SlotServeEngine:
     its bit-identity contract is checkable: paged layout, greedy
     decoding, attention prefill (padded buckets). Token streams are
     bit-identical with sharing on or off.
+
+    ``attention_impl`` (DESIGN.md §16) picks the paged decode read
+    path: ``"gather"`` (gather-then-attend, the executable reference)
+    or ``"fused"`` (one-pass Pallas block-table walk,
+    kernels/paged_attention). Both produce logits within
+    interpret-tier tolerance and bit-identical greedy token streams —
+    the kernel-equivalence test tier (tests/test_paged_attention.py)
+    and the CI servebench gate pin exactly that.
+
+    ``bucketed_dispatch`` ("auto"/"on"/"off") layers a bucketed
+    compiled-dispatch cache over scheduler rounds: instead of always
+    dispatching the full ``[K]``-row round, the engine gathers the
+    active slots into the smallest power-of-2 occupancy bucket
+    (``serve.dispatch.DecodeDispatchCache``), dispatches that
+    fixed shape, and scatters outputs back — so the jit cache holds at
+    most ``log2(K)+1`` entries per ``chunk`` variant and rounds never
+    retrace as occupancy shifts. Pad lanes are inert by construction:
+    frozen, sentinel block-table rows (scatters drop), dropped write
+    positions, and an out-of-range scatter-back index. Gated like lazy
+    growth to paged + greedy + attention-only ("auto" turns it on
+    exactly there; "on" elsewhere raises).
     """
 
     def __init__(self, model, params, *, capacity: int, max_len: int,
@@ -353,6 +375,8 @@ class SlotServeEngine:
                  quarantine_after: int = 3,
                  retry_backoff_s: float = 0.001,
                  allocator_watchdog_s: Optional[float] = None,
+                 attention_impl: str = "gather",
+                 bucketed_dispatch: str = "auto",
                  sync: Optional[SyncLibrary] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.frontend is not None:
@@ -363,6 +387,17 @@ class SlotServeEngine:
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if page_growth not in ("eager", "lazy"):
             raise ValueError(f"unknown page_growth {page_growth!r}")
+        if attention_impl not in ("gather", "fused"):
+            raise ValueError(f"unknown attention_impl {attention_impl!r}; "
+                             f"expected gather or fused")
+        if attention_impl == "fused" and kv_layout != "paged":
+            raise ValueError("attention_impl='fused' requires "
+                             "kv_layout='paged' (the fused kernel walks "
+                             "a block table)")
+        if bucketed_dispatch not in ("auto", "on", "off"):
+            raise ValueError(
+                f"unknown bucketed_dispatch {bucketed_dispatch!r}; "
+                f"expected auto, on, or off")
         self.model = model
         self.params = params
         self.capacity = capacity
@@ -372,6 +407,7 @@ class SlotServeEngine:
         self.eos_id = eos_id
         self.pad_prompts_to = pad_prompts_to
         self.kv_layout = kv_layout
+        self.attention_impl = attention_impl
         self.sync = sync if sync is not None else SyncLibrary.host_default()
         # the planning trace holds all K in-flight requests plus the
         # queued front; a window smaller than capacity would silently
@@ -382,6 +418,23 @@ class SlotServeEngine:
         # hybrid/SSM archs prefill at exact prompt length (retrace per
         # distinct length — workloads bucket their own prompts).
         self._can_pad = "mamba" not in cfg.layer_pattern
+        # Bucketed compiled dispatch (DESIGN.md §16): sound exactly where
+        # the arena is batch-free so only [K]-shaped round state gathers
+        # (paged layout — slot-dense contiguous/mamba leaves would gather
+        # the whole cache), and where per-row results cannot depend on
+        # the dispatch batch shape (argmax is per-row; categorical draws
+        # a [B]-shaped key split, so sampling engines stay full-batch).
+        bucket_ok = (kv_layout == "paged" and temperature <= 0.0
+                     and self._can_pad)
+        if bucketed_dispatch == "on" and not bucket_ok:
+            raise ValueError(
+                "bucketed_dispatch='on' requires kv_layout='paged', "
+                "greedy decoding, and attention-only layers")
+        self.bucketed_dispatch = (
+            bucketed_dispatch == "on"
+            or (bucketed_dispatch == "auto" and bucket_ok))
+        self._dispatch_cache = (DecodeDispatchCache(capacity)
+                                if self.bucketed_dispatch else None)
         # The lazy pause/rollback path only rewinds what the paged k/v
         # scatter touched (length vector; stale writes are re-written
         # before first read). Recurrent state (mamba conv/h) advances
@@ -574,6 +627,10 @@ class SlotServeEngine:
         self._chunk = jax.jit(self._chunk_impl, static_argnames=("steps",))
         self._round = jax.jit(self._round_impl,
                               static_argnames=("steps", "chunk"))
+        self._bucket_chunk = jax.jit(self._bucket_chunk_impl,
+                                     static_argnames=("steps",))
+        self._bucket_round = jax.jit(self._bucket_round_impl,
+                                     static_argnames=("steps", "chunk"))
 
     # ------------------------------------------------------------ jitted fns
     def _prefill_impl(self, params, tokens, length, *, pad_to):
@@ -607,7 +664,8 @@ class SlotServeEngine:
 
         def body(carry, key_s):
             cache, tok, frozen = carry
-            logits, cache = self.model.decode_step(params, cache, tok)
+            logits, cache = self.model.decode_step(
+                params, cache, tok, attn_impl=self.attention_impl)
             nxt = self._sample(logits, key_s)
             nxt = jnp.where(frozen, tok, nxt)
             if eos is not None:
@@ -647,6 +705,73 @@ class SlotServeEngine:
             pf_logits, cache = self.model.prefill_chunk(
                 params, cache, pf_tok, pf_qpos, pf_wpos)
         return cache, tok, toks, pf_logits
+
+    # ---- bucketed dispatch (DESIGN.md §16): gather the active slots
+    # into a [kb]-row view, run the ordinary round body at that fixed
+    # shape, scatter back to [K]. Pad lanes (row id == capacity) are
+    # inert end to end: zero length, sentinel block-table row (arena
+    # scatters drop), frozen (token stream pinned), _DROP_POS write
+    # positions, and an out-of-range scatter-back index (mode="drop").
+    # The arena leaves are batch-free under the paged layout, so only
+    # the [K]-shaped round state gathers — everything downstream of the
+    # dispatch (adopt, harvest, rollback) is unchanged.
+    def _bucket_gather(self, cache, rows, last_tok, frozen):
+        K = self.capacity
+        pad = rows >= K
+        r = jnp.minimum(rows, K - 1)
+        sentinel = jnp.int32(self.pool.pages.num_pages)
+        cache_b = dict(cache)
+        cache_b["len"] = jnp.where(pad, 0, cache["len"][r])
+        cache_b["pages"] = jnp.where(
+            pad[:, None], sentinel, cache["pages"][r])
+        return pad, r, cache_b, jnp.where(pad, 0, last_tok[r]), \
+            frozen[r] | pad
+
+    def _bucket_scatter(self, cache, rows, pad, cache_b, tok_b, toks_b,
+                        last_tok, steps):
+        K = self.capacity
+        drop = jnp.where(pad, K, rows)      # out-of-range writes drop
+        out = dict(cache_b)
+        out["len"] = cache["len"].at[drop].set(cache_b["len"], mode="drop")
+        out["pages"] = cache["pages"]       # host-owned, pass-through
+        tok = last_tok.at[drop].set(tok_b, mode="drop")
+        toks = jnp.broadcast_to(last_tok[None, :], (steps, K))
+        toks = toks.at[:, drop].set(toks_b, mode="drop")
+        return out, tok, toks
+
+    def _bucket_chunk_impl(self, params, cache, rows, last_tok, frozen,
+                           key, *, steps):
+        # trace-time side effect: fires once per new (kb, steps) shape,
+        # never on a cached dispatch — the ledger the retrace-count
+        # property test audits
+        self._dispatch_cache.record_trace(("decode", rows.shape[0], steps))
+        pad, _, cache_b, lt, fr = self._bucket_gather(
+            cache, rows, last_tok, frozen)
+        cache_o, tok_b, toks_b = self._chunk_impl(
+            params, cache_b, lt, fr, key, steps=steps)
+        return self._bucket_scatter(
+            cache, rows, pad, cache_o, tok_b, toks_b, last_tok, steps)
+
+    def _bucket_round_impl(self, params, cache, rows, last_tok, frozen,
+                           pf_tok, pf_qpos, pf_wpos, key, *,
+                           steps, chunk):
+        self._dispatch_cache.record_trace(
+            ("round", rows.shape[0], steps, chunk))
+        pad, r, cache_b, lt, fr = self._bucket_gather(
+            cache, rows, last_tok, frozen)
+        pfw = jnp.where(pad[:, None], jnp.int32(_DROP_POS), pf_wpos[r])
+        cache_o, tok_b, toks_b, pf_logits_b = self._round_impl(
+            params, cache_b, lt, fr, pf_tok[r], pf_qpos[r], pfw, key,
+            steps=steps, chunk=chunk)
+        out, tok, toks = self._bucket_scatter(
+            cache, rows, pad, cache_o, tok_b, toks_b, last_tok, steps)
+        pf_logits = None
+        if chunk:
+            drop = jnp.where(pad, self.capacity, rows)
+            pf_logits = jnp.zeros(
+                (self.capacity, chunk, pf_logits_b.shape[-1]),
+                pf_logits_b.dtype).at[drop].set(pf_logits_b, mode="drop")
+        return out, tok, toks, pf_logits
 
     # ------------------------------------------------------------ submission
     def submit(self, prompt, max_new_tokens: int,
@@ -1717,6 +1842,15 @@ class SlotServeEngine:
             # rolled-back length makes the resumed chunk rewrite every
             # dropped position before its first read
             view["pages"] = self.pool.masked_table(paused)
+        bucket_rows = None
+        if self.bucketed_dispatch:
+            # every active slot rides the bucket (prefilling/paused rows
+            # included: the decode-scan-then-chunk-scatter ordering
+            # invariant needs their lanes computed); vacant slots are
+            # pure scratch and stay out, shrinking the dispatch
+            kb = self._dispatch_cache.bucket(len(self.active))
+            bucket_rows = jnp.asarray(self._dispatch_cache.pad_rows(
+                sorted(self.active), kb))
         # dispatch section: the PRNG split is the ONLY host state
         # consumed before the jitted call returns, so restoring the key
         # on failure rolls the whole section back — a retried round
@@ -1741,17 +1875,31 @@ class SlotServeEngine:
                     pf_qpos[s, :] = p0 + np.arange(C)
                     pf_wpos[s, :v] = p0 + np.arange(v)
                     valid[s] = v
-                cache, tok, toks, pf_logits = self._round(
-                    self.params, view,
-                    jnp.asarray(self._last_tok), jnp.asarray(frozen),
-                    jnp.asarray(pf_tok), jnp.asarray(pf_qpos),
-                    jnp.asarray(pf_wpos), sub,
-                    steps=steps, chunk=C if chunk_rows else 0)
+                if bucket_rows is not None:
+                    cache, tok, toks, pf_logits = self._bucket_round(
+                        self.params, view, bucket_rows,
+                        jnp.asarray(self._last_tok), jnp.asarray(frozen),
+                        jnp.asarray(pf_tok), jnp.asarray(pf_qpos),
+                        jnp.asarray(pf_wpos), sub,
+                        steps=steps, chunk=C if chunk_rows else 0)
+                else:
+                    cache, tok, toks, pf_logits = self._round(
+                        self.params, view,
+                        jnp.asarray(self._last_tok), jnp.asarray(frozen),
+                        jnp.asarray(pf_tok), jnp.asarray(pf_qpos),
+                        jnp.asarray(pf_wpos), sub,
+                        steps=steps, chunk=C if chunk_rows else 0)
             else:
-                cache, tok, toks = self._chunk(
-                    self.params, view,
-                    jnp.asarray(self._last_tok), jnp.asarray(frozen), sub,
-                    steps=steps)
+                if bucket_rows is not None:
+                    cache, tok, toks = self._bucket_chunk(
+                        self.params, view, bucket_rows,
+                        jnp.asarray(self._last_tok), jnp.asarray(frozen),
+                        sub, steps=steps)
+                else:
+                    cache, tok, toks = self._chunk(
+                        self.params, view,
+                        jnp.asarray(self._last_tok), jnp.asarray(frozen),
+                        sub, steps=steps)
                 pf_logits = None
         except InjectedFault:
             self._key = key0
@@ -1963,6 +2111,23 @@ class SlotServeEngine:
             "decode_rounds_stalled_by_prefill": float(
                 self.decode_rounds_stalled_by_prefill),
         }
+        # paged-attention read path + bucketed-dispatch ledger (§16):
+        # retraces must be 0 in steady state — one trace per distinct
+        # (bucket, steps, chunk) shape, a set bounded by log2(K)+1
+        # buckets times the chunk ∈ {0, C} variants
+        out.update({
+            "attention_fused": float(self.attention_impl == "fused"),
+            "bucketed_dispatch": float(self.bucketed_dispatch),
+            "dispatch_traces": float(
+                self._dispatch_cache.traces
+                if self._dispatch_cache is not None else 0),
+            "dispatch_trace_keys": float(
+                len(self._dispatch_cache.trace_keys)
+                if self._dispatch_cache is not None else 0),
+            "dispatch_retraces": float(
+                self._dispatch_cache.retraces
+                if self._dispatch_cache is not None else 0),
+        })
         if self.kv_layout == "paged":
             pp = self.pool.pages
             ls = pp.lock_stats()

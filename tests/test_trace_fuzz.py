@@ -87,9 +87,11 @@ def test_pool_fuzz_property(seed, num_pages, page_size, cache):
 
 
 # ======================================================== engine level
-def _run_trace_pair(model, params, seed, *, vocab):
+def _run_trace_pair(model, params, seed, *, vocab, attention_impl="gather"):
     """One seeded trace through cache-on and cache-off engines; returns
-    the two result dicts plus the cache-on engine for stat asserts."""
+    the two result dicts plus the cache-on engine for stat asserts.
+    ``attention_impl`` selects the paged decode read path (§16) — the
+    bit-identity oracle must hold under either."""
     results = {}
     eng_on = None
     for mode in ("off", "on"):
@@ -98,7 +100,8 @@ def _run_trace_pair(model, params, seed, *, vocab):
         eng = SlotServeEngine(model, params, capacity=3, max_len=128,
                               kv_layout="paged", page_size=4, seed=0,
                               prefix_cache=mode, prefill_chunk_tokens=4,
-                              decode_chunk=2)
+                              decode_chunk=2,
+                              attention_impl=attention_impl)
         results[mode] = drive_trace(eng, events)
         assert eng.grant_log == sorted(eng.grant_log)   # FIFO grants
         if mode == "on":
@@ -129,13 +132,18 @@ def _assert_streams_match(off, on):
     assert compared > 0                    # the oracle actually engaged
 
 
-def test_engine_trace_fuzz_smoke(lm_setup):
-    """Tier-1: two seeded traces through the full engine pair."""
+@pytest.mark.parametrize("impl", ["gather", "fused"])
+def test_engine_trace_fuzz_smoke(lm_setup, impl):
+    """Tier-1: two seeded traces through the full engine pair, under
+    both paged decode read paths."""
     cfg, model, params = lm_setup
     for seed in (0, 1):
-        off, on, _ = _run_trace_pair(model, params, seed,
-                                     vocab=cfg.vocab_size)
+        off, on, eng = _run_trace_pair(model, params, seed,
+                                       vocab=cfg.vocab_size,
+                                       attention_impl=impl)
         _assert_streams_match(off, on)
+        # bucketed dispatch is auto-on here; it must never retrace
+        assert eng.stats()["dispatch_retraces"] == 0.0
 
 
 def test_engine_trace_with_reuse_hits_cache(lm_setup):
@@ -157,13 +165,15 @@ def test_engine_trace_with_reuse_hits_cache(lm_setup):
 
 
 @pytest.mark.slow
-def test_engine_trace_fuzz_nightly_sweep(lm_setup):
+@pytest.mark.parametrize("impl", ["gather", "fused"])
+def test_engine_trace_fuzz_nightly_sweep(lm_setup, impl):
     """The nightly lane: 200 seeded engine traces, cache on vs off,
-    bit-identity + leak oracle on every one."""
+    bit-identity + leak oracle on every one — per read path."""
     cfg, model, params = lm_setup
     for seed in range(200):
         off, on, _ = _run_trace_pair(model, params, seed,
-                                     vocab=cfg.vocab_size)
+                                     vocab=cfg.vocab_size,
+                                     attention_impl=impl)
         _assert_streams_match(off, on)
 
 
